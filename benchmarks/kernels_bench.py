@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: wall time of the XLA reference paths on CPU (the
+Pallas kernels target TPU; interpret-mode timing is not meaningful), plus
+interpret-mode correctness spot checks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench():
+    rows = []
+    k = jax.random.PRNGKey(0)
+
+    # fedavg_agg: 64 cohorts x 4M params
+    deltas = jax.random.normal(k, (64, 1 << 22), jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (64,))
+    f = jax.jit(lambda d, ww: ref.fedavg_agg_ref(d, ww))
+    us = _time(f, deltas, w)
+    gb = deltas.nbytes / 1e9
+    rows.append(("agg_xla_64x4M", round(us, 1), round(gb / (us / 1e6), 2)))
+    got = fedavg_agg(deltas[:, :8192], w, interpret=True)
+    want = ref.fedavg_agg_ref(deltas[:, :8192], w)
+    rows.append(("agg_kernel_allclose", 0.0,
+                 int(np.allclose(got, want, rtol=1e-4, atol=1e-4))))
+
+    # flash attention: B2 S1024 H8 hd64
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (2, 1024, 8, 64),
+                                  jnp.float32) for i in range(3))
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+    us = _time(f, q, kk, v)
+    rows.append(("flash_xla_2x1024x8x64", round(us, 1), 0))
+    got = flash_attention(q[:, :256], kk[:, :256], v[:, :256], interpret=True)
+    want = ref.flash_attention_ref(q[:, :256], kk[:, :256], v[:, :256])
+    rows.append(("flash_kernel_allclose", 0.0,
+                 int(np.allclose(got, want, rtol=2e-3, atol=2e-3))))
+
+    # ssm scan: B2 S512 nh8 hd64 st64
+    ks = jax.random.split(k, 4)
+    xd = jax.random.normal(ks[0], (2, 512, 8, 64)) * 0.5
+    ld = -jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 8)))
+    Bc = jax.random.normal(ks[2], (2, 512, 64)) * 0.5
+    Cc = jax.random.normal(ks[3], (2, 512, 64)) * 0.5
+    from repro.models.ssm import ssd_chunked
+
+    f = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+    us = _time(f, xd, ld, Bc, Cc)
+    rows.append(("ssd_xla_2x512x8x64", round(us, 1), 0))
+    got = ssm_scan(xd[:, :128], ld[:, :128], Bc[:, :128], Cc[:, :128],
+                   chunk=64, head_block=8, interpret=True)
+    want = ref.ssm_scan_ref(xd[:, :128], ld[:, :128], Bc[:, :128], Cc[:, :128])
+    rows.append(("ssd_kernel_allclose", 0.0,
+                 int(np.allclose(got, want, rtol=2e-3, atol=2e-3))))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark orchestrator: one function per paper table/figure plus the
+kernel micro-benchmarks and the roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import fedar_figs, kernels_bench, roofline
+
+    rows = []
+    rows += fedar_figs.table1_trust_events()
+    rows += fedar_figs.fig7_trust_trajectories()
+    if not quick:
+        rows += fedar_figs.fig6_batch_epoch()
+        rows += fedar_figs.fig8_straggler_effect()
+        rows += fedar_figs.selection_ablation()
+        rows += fedar_figs.poisoning_defense()
+    rows += kernels_bench.bench()
+    rows += roofline.rows()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

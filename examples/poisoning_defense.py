@@ -1,0 +1,44 @@
+"""Poisoning-attack defense demo: two robots flip 60% of their labels (the
+paper's poisoning setup, §IV.A).  FoolsGold similarity re-weighting + the
+deviation ban keep the global model clean; disabling both lets the attack
+degrade accuracy.
+
+Run:  PYTHONPATH=src python examples/poisoning_defense.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FedConfig
+from repro.configs.fedar_mnist import MnistConfig
+from repro.core.fedar import FedARServer
+from repro.core.resources import TaskRequirement
+from repro.data.federated import table2_fleet
+from repro.data.synthetic import make_digits
+
+
+def run(defended: bool, flip=0.8, rounds=10):
+    fed = FedConfig(
+        num_clients=12, local_epochs=3, timeout=30.0,
+        foolsgold=defended,
+        deviation_gamma=2.5 if defended else 1e9,
+    )
+    srv = FedARServer(MnistConfig(), fed, TaskRequirement())
+    data = table2_fleet(samples_per_client=300, flip_frac=flip)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    ex, ey = make_digits(500, seed=99)
+    hist = srv.run(data, rounds=rounds, eval_set=(ex, ey))
+    return hist
+
+
+def main():
+    print("defended (FoolsGold + deviation ban):")
+    h1 = run(True)
+    print("  acc:", [round(a, 3) for a in h1["acc"]])
+    print("undefended:")
+    h0 = run(False)
+    print("  acc:", [round(a, 3) for a in h0["acc"]])
+    print(f"\nfinal: defended {h1['acc'][-1]:.3f} vs undefended {h0['acc'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

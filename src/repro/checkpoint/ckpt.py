@@ -1,0 +1,64 @@
+"""Msgpack pytree checkpointing with sharding-aware restore.
+
+Save: flatten the pytree to (path, dtype, shape, raw bytes) records.
+Restore: rebuild arrays, optionally ``jax.device_put`` onto provided
+shardings (so a checkpoint written on one mesh restores onto another).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in flat]
+    return names, [l for _, l in flat], treedef
+
+
+def save(path: str, tree: Any, *, step: int = 0) -> None:
+    names, leaves, _ = _paths(tree)
+    records = {}
+    for n, l in zip(names, leaves):
+        arr = np.asarray(jax.device_get(l))
+        records[n] = {
+            "dtype": arr.dtype.name,  # name survives ml_dtypes (bfloat16)
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    payload = {"step": step, "records": records}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: Any, *, shardings: Optional[Any] = None):
+    """Returns (tree, step).  ``shardings``: optional matching pytree of
+    jax.sharding.Sharding to place leaves onto."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    names, leaves, treedef = _paths(template)
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
+    )
+    out = []
+    for n, tmpl, sh in zip(names, leaves, shard_leaves):
+        rec = payload["records"][n]
+        import ml_dtypes  # bfloat16 et al. live here, not in numpy
+
+        dt = np.dtype(getattr(ml_dtypes, rec["dtype"], rec["dtype"]))
+        arr = np.frombuffer(rec["data"], dtype=dt).reshape(rec["shape"])
+        if list(arr.shape) != list(tmpl.shape):
+            raise ValueError(f"shape mismatch for {n}: {arr.shape} vs {tmpl.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), payload["step"]

@@ -1,0 +1,60 @@
+"""Architecture config registry.
+
+Each assigned architecture lives in its own module with the exact shapes from
+the assignment brief (source citations in brackets in each file).  Use
+``get_config(arch_id)`` / ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.common.config import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "zamba2-7b",
+    "internvl2-1b",
+    "arctic-480b",
+    "qwen2-moe-a2.7b",
+    "xlstm-350m",
+    "minicpm3-4b",
+    "musicgen-medium",
+    "tinyllama-1.1b",
+    "yi-9b",
+    "gemma3-1b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch == "fedar-mnist":
+        mod = importlib.import_module("repro.configs.fedar_mnist")
+        return mod.CONFIG
+    if arch not in _MOD:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS + ['fedar-mnist']}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch]}")
+    return mod.CONFIG
+
+
+LONG_WINDOW = 4096  # window cap applied to attention layers at 500k context
+
+
+def cfg_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-conditioned config tweaks.
+
+    long_500k requires sub-quadratic attention: SSM archs run natively; every
+    attention layer gets a sliding window (ring-buffer KV cache) capped at
+    LONG_WINDOW.  See DESIGN.md §5.
+    """
+    if shape.name == "long_500k" and cfg.attention != "none":
+        over = {}
+        if cfg.sliding_window == 0 or cfg.sliding_window > LONG_WINDOW:
+            over["sliding_window"] = LONG_WINDOW
+        if cfg.global_every and (
+            cfg.local_window == 0 or cfg.local_window > LONG_WINDOW
+        ):
+            over["local_window"] = min(cfg.local_window or LONG_WINDOW, LONG_WINDOW)
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+    return cfg

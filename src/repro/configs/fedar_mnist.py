@@ -1,0 +1,17 @@
+"""The paper's own simulation setting (§IV): 12 mobile robots, 28x28 digit
+classification, MLP trained with local SGD (B=20, E=5 default)."""
+from dataclasses import dataclass
+
+from repro.common.config import FedConfig
+
+
+@dataclass(frozen=True)
+class MnistConfig:
+    name: str = "fedar-mnist"
+    input_dim: int = 784  # flattened 28x28 (paper §IV.B)
+    hidden: int = 128
+    num_classes: int = 10
+
+
+CONFIG = MnistConfig()
+FED = FedConfig()

@@ -1,0 +1,65 @@
+"""Server-side aggregation strategies (§III.B.7, Algorithm 2 lines 13-14).
+
+Operates on stacked flat client updates (N, D) — the simulation scale.  The
+mesh-scale equivalent lives in ``core/distributed.py`` (pytree + collectives)
+and the Pallas kernel ``kernels/fedavg_agg`` implements the same weighted
+reduction as a tiled TPU kernel.
+
+Modes:
+  fedavg  -- synchronous FedAvg [24]: wait for everyone (stragglers included);
+             round time = max(latency).
+  fedar   -- the paper: aggregate arrivals within timeout t, skip stragglers;
+             round time = t.
+  async   -- FedAsync-style: fold updates one-by-one in arrival order with
+             staleness-decayed mixing weight; round time = t (server never
+             blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FedConfig
+
+
+def deviation_mask(deltas: jnp.ndarray, active: jnp.ndarray, gamma: float):
+    """Paper's ban trigger ``G^i - D_m^i > gamma``: robust z-score of each
+    client's update distance from the active-population mean."""
+    w = active.astype(jnp.float32)[:, None]
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    mean = jnp.sum(deltas * w, axis=0) / denom
+    dist = jnp.linalg.norm(deltas - mean, axis=1)  # (N,)
+    act_dist = jnp.where(active, dist, jnp.nan)
+    mu = jnp.nanmean(act_dist)
+    sd = jnp.sqrt(jnp.nanmean((act_dist - mu) ** 2) + 1e-12)
+    return active & (dist > mu + gamma * sd)
+
+
+def fedavg_aggregate(global_flat, deltas, weights, mask):
+    """w <- w + sum_m mask_m * weight_m * delta_m / sum(mask * weight)."""
+    w = weights * mask.astype(weights.dtype)
+    denom = jnp.maximum(jnp.sum(w), 1e-9)
+    upd = jnp.einsum("n,nd->d", w, deltas) / denom
+    return global_flat + upd
+
+
+def async_aggregate(global_flat, models, weights, mask, order, fed: FedConfig):
+    """Fold client MODELS (not deltas) in arrival order:
+        w <- (1 - a_m) w + a_m w_m,  a_m = alpha * weight_m-normalized.
+    ``order``: (N,) int32 permutation by arrival time; masked-out entries are
+    skipped (mix weight 0)."""
+    wnorm = weights / jnp.maximum(jnp.max(weights), 1e-9)
+
+    def body(g, idx):
+        a = fed.staleness_alpha * wnorm[idx] * mask[idx].astype(jnp.float32)
+        return (1.0 - a) * g + a * models[idx], None
+
+    g, _ = jax.lax.scan(body, global_flat, order)
+    return g
+
+
+def staleness_weight(staleness, fed: FedConfig):
+    """FedAsync poly decay: s(tau) = (1 + tau)^-0.5."""
+    if fed.staleness_decay == "const":
+        return jnp.ones_like(staleness)
+    return (1.0 + staleness) ** -0.5

@@ -1,0 +1,41 @@
+"""FoolsGold sybil/poisoning mitigation [26] (§III.B.6).
+
+Clients that repeatedly send *similar* gradient updates (sybils pushing a
+common poisoned objective) get their aggregation learning rate scaled down.
+Implementation follows Fung et al.: cosine similarity over per-client
+historical aggregate updates, pardoning, then logit re-scaling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def foolsgold_weights(history: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """history: (N, D) per-client cumulative update vectors.
+    active: (N,) bool — clients contributing this round.
+    Returns (N,) aggregation weights in [0, 1]."""
+    N = history.shape[0]
+    norm = jnp.linalg.norm(history, axis=1, keepdims=True)
+    unit = history / jnp.maximum(norm, 1e-9)
+    cs = unit @ unit.T  # (N, N)
+    cs = cs - jnp.eye(N)
+    cs = jnp.where(active[:, None] & active[None, :], cs, -1.0)
+
+    maxcs = jnp.max(cs, axis=1)  # v_i
+    # pardoning: if v_j > v_i, rescale cs_ij by v_i / v_j
+    ratio = maxcs[:, None] / jnp.maximum(maxcs[None, :], 1e-9)
+    cs = jnp.where(maxcs[None, :] > maxcs[:, None], cs * ratio, cs)
+
+    wv = 1.0 - jnp.max(cs, axis=1)
+    wv = jnp.clip(wv, 0.0, 1.0)
+    # logit re-scaling (kappa = 0.5 midpoint as in the paper's release)
+    wv = jnp.where(wv == 1.0, 0.99, wv)
+    logit = jnp.log(wv / jnp.maximum(1.0 - wv, 1e-9) + 1e-9) + 0.5
+    wv = jnp.clip(logit, 0.0, 1.0)
+    return jnp.where(active, wv, 0.0)
+
+
+def update_history(history: jnp.ndarray, deltas: jnp.ndarray, active: jnp.ndarray):
+    """Accumulate flattened client deltas into the similarity history."""
+    return history + jnp.where(active[:, None], deltas, 0.0)

@@ -1,0 +1,117 @@
+"""Resource model for the simulated robot fleet (CheckResource, §III.B.2).
+
+Each client n exposes (memory M_n, bandwidth B_n, battery E_n, compute F_n).
+The paper's physical robots are the hardware gate (repro band 2/5) — we
+replace them with a virtual-time model:
+
+  latency_n = train_flops / F_n + model_bytes / B_n   (compute + upload)
+
+Battery drains proportionally to training compute; a drained client fails
+``CheckResource``.  Heterogeneity profiles mirror §IV.A: 8 reliable robots,
+2 resource-starved, 2 unreliable/poisoning.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FedConfig
+
+
+class ResourceState(NamedTuple):
+    memory: jnp.ndarray  # (N,) MB available
+    bandwidth: jnp.ndarray  # (N,) MB/s
+    battery: jnp.ndarray  # (N,) in [0, 1]
+    compute: jnp.ndarray  # (N,) MFLOP/s
+
+
+class TaskRequirement(NamedTuple):
+    memory: float = 64.0  # MB
+    bandwidth: float = 0.5  # MB/s
+    battery: float = 0.15
+
+
+def make_fleet(
+    num_clients: int,
+    *,
+    num_starved: int = 2,
+    num_poisoners: int = 2,
+    seed: int = 0,
+) -> tuple[ResourceState, np.ndarray]:
+    """Heterogeneous fleet per §IV.A.  Returns (resources, poisoner mask).
+
+    The last ``num_poisoners`` clients send corrupted models; the
+    ``num_starved`` before them have scarce memory/battery/bandwidth.
+    """
+    rng = np.random.default_rng(seed)
+    memory = rng.uniform(128, 1024, num_clients)
+    bandwidth = rng.uniform(1.0, 8.0, num_clients)
+    battery = rng.uniform(0.6, 1.0, num_clients)
+    compute = rng.uniform(50, 400, num_clients)  # MFLOP/s
+
+    starved = slice(num_clients - num_poisoners - num_starved, num_clients - num_poisoners)
+    memory[starved] = rng.uniform(16, 72, num_starved)
+    bandwidth[starved] = rng.uniform(0.05, 0.4, num_starved)
+    battery[starved] = rng.uniform(0.1, 0.3, num_starved)
+    compute[starved] = rng.uniform(5, 30, num_starved)
+
+    poison = np.zeros(num_clients, bool)
+    if num_poisoners:
+        poison[-num_poisoners:] = True
+
+    res = ResourceState(
+        memory=jnp.asarray(memory, jnp.float32),
+        bandwidth=jnp.asarray(bandwidth, jnp.float32),
+        battery=jnp.asarray(battery, jnp.float32),
+        compute=jnp.asarray(compute, jnp.float32),
+    )
+    return res, poison
+
+
+def check_resource(res: ResourceState, req: TaskRequirement) -> jnp.ndarray:
+    """Algorithm 1 CheckResource: RA list as a boolean mask over clients."""
+    return (
+        (res.memory >= req.memory)
+        & (res.bandwidth >= req.bandwidth)
+        & (res.battery >= req.battery)
+    )
+
+
+def resource_score(res: ResourceState, req: TaskRequirement) -> jnp.ndarray:
+    """Scalar availability used as the secondary sort key (Algorithm 2 line 8):
+    normalized headroom over the requirement."""
+    return (
+        jnp.minimum(res.memory / req.memory, 4.0)
+        + jnp.minimum(res.bandwidth / req.bandwidth, 4.0)
+        + jnp.minimum(res.battery / max(req.battery, 1e-6), 4.0)
+    ) / 3.0
+
+
+def round_latency(
+    res: ResourceState,
+    *,
+    train_flops: float,
+    model_bytes: float,
+    key,
+    jitter: float = 0.15,
+) -> jnp.ndarray:
+    """Virtual seconds for one local round per client (compute + upload),
+    with multiplicative log-normal jitter."""
+    base = train_flops / (res.compute * 1e6) + model_bytes / (res.bandwidth * 1e6)
+    noise = jnp.exp(jitter * jax.random.normal(key, base.shape))
+    return base * noise
+
+
+def drain_battery(
+    res: ResourceState, participated: jnp.ndarray, *, cost: float = 0.02
+) -> ResourceState:
+    """Battery cost of one training round; idle clients trickle-charge."""
+    batt = jnp.where(
+        participated,
+        jnp.maximum(res.battery - cost, 0.0),
+        jnp.minimum(res.battery + cost / 4, 1.0),
+    )
+    return res._replace(battery=batt)

@@ -1,0 +1,63 @@
+"""Client selection — Algorithm 2 lines 6-10.
+
+1. RA  = CheckResource(...)                      (resource mask)
+2. S   = sort eligible clients by (trust, RA)    (descending)
+3. C   = top floor(|S| * F) of S
+4. M_m = random subset of C                      (participants)
+
+``select_clients`` is jittable: sorting uses a composite key and the random
+subset is a uniform choice without replacement via Gumbel top-k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FedConfig
+from repro.core.resources import ResourceState, TaskRequirement, check_resource, resource_score
+from repro.core.trust import TrustState, eligible
+
+
+def select_clients(
+    key,
+    trust: TrustState,
+    res: ResourceState,
+    req: TaskRequirement,
+    fed: FedConfig,
+    *,
+    num_participants: int | None = None,
+):
+    """Returns (selected mask (N,) bool, eligible mask (N,) bool).
+
+    ``num_participants`` defaults to max(1, floor(#eligible * F)) — but must
+    be static under jit, so we take fraction of the full fleet and rely on
+    masking for ineligible clients (an ineligible client is never selected
+    because its sort key is -inf).
+    """
+    N = trust.score.shape[0]
+    ra = check_resource(res, req)
+    ok = ra & eligible(trust, fed)
+
+    if num_participants is None:
+        num_participants = max(1, int(N * fed.client_fraction))
+    k = num_participants
+
+    # composite sort key: trust primary, resource headroom secondary.
+    # "random" baseline: uniform among resource-eligible clients.
+    if fed.selection == "random":
+        score = jnp.zeros_like(trust.score)
+    else:
+        score = trust.score + 0.01 * resource_score(res, req)
+    score = jnp.where(ok, score, -jnp.inf)
+
+    # top S*F candidate pool, then uniform random subset of size k among the
+    # pool: implemented as Gumbel noise *within* the pool then top-k.
+    pool_size = min(N, max(k, int(N * fed.client_fraction)))
+    order = jnp.argsort(-score)
+    pool_mask = jnp.zeros((N,), bool).at[order[:pool_size]].set(True) & ok
+
+    g = jax.random.gumbel(key, (N,))
+    pick_key = jnp.where(pool_mask, g, -jnp.inf)
+    chosen = jnp.argsort(-pick_key)[:k]
+    selected = jnp.zeros((N,), bool).at[chosen].set(True) & pool_mask
+    return selected, ok

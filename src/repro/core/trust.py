@@ -1,0 +1,79 @@
+"""Trust engine — Table I + Algorithm 1 of the paper, vectorized.
+
+State per client: trust score C_m, participation count, unsuccessful count.
+``update_trust`` implements UpdateTrustScore(i, m, w_i, t, gamma) over the
+whole client population at once with ``jnp.where`` — fully jittable so it can
+live inside the distributed round step.
+
+Paper semantics implemented exactly:
+  * on-time model        -> C_Reward (+8), U_m^i = 0
+  * late/no model        -> U_m^i = 1, then by lifetime failure rate:
+        rate < 0.2           -> C_Penalty (-2)
+        0.2 <= rate < 0.5    -> C_Blame  (-8)
+        rate >= 0.5          -> C_Ban    (-16)
+  * model deviation ||G^i - D_m^i|| > gamma  -> C_Ban (regardless of timing)
+  * eligible-but-not-selected                -> C_Interested (+1)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FedConfig
+
+
+class TrustState(NamedTuple):
+    score: jnp.ndarray  # (N,) float32
+    participations: jnp.ndarray  # (N,) int32 — rounds the client was selected
+    failures: jnp.ndarray  # (N,) int32 — cumulative U_m
+
+
+def init_trust(num_clients: int, fed: FedConfig) -> TrustState:
+    return TrustState(
+        score=jnp.full((num_clients,), fed.c_initial, jnp.float32),
+        participations=jnp.zeros((num_clients,), jnp.int32),
+        failures=jnp.zeros((num_clients,), jnp.int32),
+    )
+
+
+def update_trust(
+    state: TrustState,
+    fed: FedConfig,
+    *,
+    selected: jnp.ndarray,  # (N,) bool — participant this round
+    on_time: jnp.ndarray,  # (N,) bool — model arrived within timeout t
+    deviated: jnp.ndarray,  # (N,) bool — ||G - D_m|| > gamma
+    interested: jnp.ndarray,  # (N,) bool — eligible but NOT selected
+) -> TrustState:
+    succeeded = selected & on_time & ~deviated
+    failed_round = selected & ~succeeded
+
+    participations = state.participations + selected.astype(jnp.int32)
+    failures = state.failures + failed_round.astype(jnp.int32)
+    # lifetime failure rate (Algorithm 1: (1/i) sum_p U_m^p)
+    rate = failures / jnp.maximum(participations, 1)
+
+    delta = jnp.zeros_like(state.score)
+    delta = jnp.where(succeeded, fed.c_reward, delta)
+    late_delta = jnp.where(
+        rate < fed.penalty_band,
+        fed.c_penalty,
+        jnp.where(rate < fed.blame_band, fed.c_blame, fed.c_ban),
+    )
+    delta = jnp.where(selected & ~on_time & ~deviated, late_delta, delta)
+    # deviation beyond gamma is an immediate ban event (Algorithm 1 line 11)
+    delta = jnp.where(selected & deviated, fed.c_ban, delta)
+    delta = jnp.where(interested & ~selected, fed.c_interested, delta)
+
+    return TrustState(
+        score=state.score + delta,
+        participations=participations,
+        failures=failures,
+    )
+
+
+def eligible(state: TrustState, fed: FedConfig) -> jnp.ndarray:
+    """Clients whose trust qualifies for task participation."""
+    return state.score >= fed.min_trust

@@ -1,0 +1,81 @@
+"""Federated data partitioning.
+
+``table2_fleet`` reproduces the paper's Table II exactly: 12 robots, per-robot
+label subsets / sample counts / activation functions, with the 4 unreliable
+robots (3, 5, 6, 9 — 1-indexed) holding fewer samples and classes and the two
+poisoners label-flipping.
+
+``dirichlet_partition`` is the standard non-IID splitter for cohort-scale
+experiments (the paper stresses FL works with non-IID data).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import make_digits
+
+# Table II: (labels, activation, n_samples); softmax=1, relu=0
+TABLE_II = [
+    (list(range(10)), 1, 1000),  # Robot 1
+    (list(range(10)), 0, 1000),  # Robot 2
+    ([0, 1, 2, 3], 1, 400),  # Robot 3  (resource-starved)
+    (list(range(10)), 1, 1000),  # Robot 4
+    ([4, 5, 6], 0, 300),  # Robot 5  (resource-starved)
+    ([7, 8, 9], 0, 300),  # Robot 6  (unreliable)
+    (list(range(10)), 1, 1000),  # Robot 7
+    (list(range(10)), 0, 1000),  # Robot 8
+    ([5, 6, 8], 1, 300),  # Robot 9  (unreliable)
+    (list(range(10)), 1, 1000),  # Robot 10
+    (list(range(10)), 0, 1000),  # Robot 11
+    (list(range(10)), 1, 1000),  # Robot 12
+]
+
+
+def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
+                 samples_per_client: int | None = None):
+    """Stacked fleet data.  Arrays are padded to the max sample count with
+    wrap-around so vmap over clients is rectangular; ``sizes`` holds n_u.
+
+    ``poisoners``: 0-indexed robots whose labels are flipped (the paper uses
+    two poisoning robots).  ``samples_per_client`` overrides Table II counts
+    (useful to shrink tests)."""
+    xs, ys, sizes, acts = [], [], [], []
+    n_max = 0
+    for i, (labels, act, n) in enumerate(TABLE_II):
+        if samples_per_client:
+            n = min(n, samples_per_client)
+        flip = flip_frac if i in poisoners else 0.0
+        x, y = make_digits(n, labels, seed=seed * 101 + i, flip_frac=flip)
+        xs.append(x)
+        ys.append(y)
+        sizes.append(n)
+        acts.append(act)
+        n_max = max(n_max, n)
+    # pad by wrapping
+    for i in range(len(xs)):
+        n = xs[i].shape[0]
+        if n < n_max:
+            reps = int(np.ceil(n_max / n))
+            xs[i] = np.tile(xs[i], (reps, 1))[:n_max]
+            ys[i] = np.tile(ys[i], reps)[:n_max]
+    return {
+        "x": np.stack(xs),
+        "y": np.stack(ys),
+        "sizes": np.asarray(sizes, np.float32),
+        "activations": np.asarray(acts, np.int32),
+    }
+
+
+def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 0):
+    """Non-IID label-dirichlet split.  Returns list of index arrays."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    idx_by_class = [np.where(y == c)[0] for c in classes]
+    client_idx = [[] for _ in range(num_clients)]
+    for idxs in idx_by_class:
+        rng.shuffle(idxs)
+        props = rng.dirichlet([alpha] * num_clients)
+        cuts = (np.cumsum(props) * len(idxs)).astype(int)[:-1]
+        for cid, part in enumerate(np.split(idxs, cuts)):
+            client_idx[cid].extend(part.tolist())
+    return [np.asarray(sorted(ci)) for ci in client_idx]

@@ -1,0 +1,39 @@
+"""Batching pipeline: host-side iterator producing device-ready batches with
+optional cohort layout (leading dim grouped by cohort for the FedAR step)."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.data.synthetic import token_stream
+
+
+def lm_batches(
+    cfg: ModelConfig,
+    *,
+    batch: int,
+    seq: int,
+    steps: int,
+    seed: int = 0,
+    patches: bool = False,
+) -> Iterator[dict]:
+    """Token batches for any LM arch; adds stub patch embeddings for VLM."""
+    rng = np.random.default_rng(seed + 7)
+    for b in token_stream(steps, batch, seq, cfg.vocab_size, seed=seed):
+        if patches or cfg.frontend == "vision_stub":
+            b["patches"] = rng.standard_normal(
+                (batch, cfg.num_patches, 1024)
+            ).astype(np.float32)
+        yield b
+
+
+def cohort_batches(base: Iterator[dict], num_cohorts: int) -> Iterator[dict]:
+    """Reshape (B, ...) batches to cohort-major (C, B/C, ...) stacking."""
+    for b in base:
+        out = {}
+        for k, v in b.items():
+            B = v.shape[0]
+            out[k] = v.reshape(num_cohorts, B // num_cohorts, *v.shape[1:])
+        yield out

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: trust-weighted federated aggregation.
+
+The FedAR server's hot op — ``out[d] = sum_n w[n] * deltas[n, d]`` over
+stacked client deltas — is a memory-bound streaming reduction (arithmetic
+intensity 2 FLOPs / 4 bytes).  Tiling: the parameter axis D is blocked into
+lane-aligned VMEM tiles; each grid step streams its (N, BLOCK_D) slab
+HBM->VMEM once and reduces over clients in fp32.  N (clients/cohorts) is
+small (<=256) so a whole client-column fits VMEM comfortably:
+    VMEM/step = N * BLOCK_D * 4B = 256 * 2048 * 4 = 2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048  # lane-aligned (2048 = 16 * 128)
+
+
+def _agg_kernel(w_ref, d_ref, o_ref):
+    # w_ref: (N, 1) f32; d_ref: (N, BLOCK_D); o_ref: (BLOCK_D,)
+    w = w_ref[...]  # (N, 1)
+    d = d_ref[...].astype(jnp.float32)  # (N, BLOCK_D)
+    o_ref[...] = jnp.sum(w * d, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def fedavg_agg(deltas, weights, *, interpret: bool = False, block_d: int = BLOCK_D):
+    """deltas: (N, D) any float dtype; weights: (N,) -> (D,) float32.
+
+    D is padded to a multiple of ``block_d`` (zero-padded tail contributes
+    zeros, then sliced off)."""
+    N, D = deltas.shape
+    pad = (-D) % block_d
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    Dp = D + pad
+    grid = (Dp // block_d,)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, 1), lambda i: (0, 0)),
+            pl.BlockSpec((N, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32)[:, None], deltas)
+    return out[:D]

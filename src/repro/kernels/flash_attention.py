@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: flash attention with causal + sliding-window masking.
+
+Online-softmax attention tiled for VMEM: grid (batch*heads, q_blocks,
+k_blocks) with the k axis innermost so fp32 scratch accumulators (running
+max m, normalizer l, output acc) carry across k blocks.  Block shapes are
+MXU-aligned (block_q x head_dim and block_k x head_dim tiles, head_dim a
+multiple of 128 preferred).
+
+VMEM per step (defaults, hd=128):
+  q (128x128x4) + k,v (2x128x128x4) + acc (128x128x4) + scores ~= 0.4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, block_q, block_k, nk
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)  # (bk, hd)
+    s = jnp.dot(q, k.T) * scale  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "interpret", "block_q", "block_k"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    interpret: bool = False, block_q: int = BLOCK_Q, block_k: int = BLOCK_K
+):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd).  S must divide by the blocks.
+    GQA callers repeat kv heads before the call (or pass H==num_kv_heads
+    groups separately)."""
+    B, S, H, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = hd**-0.5
+
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    qb, kb, vb = bh(q), bh(k), bh(v)
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            nk=nk,
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,40 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op dispatches between the Pallas kernel (TPU target; ``interpret=True``
+emulation on CPU) and the pure-XLA reference path.  The model code calls
+these through ``use_pallas`` config so CPU dry-runs lower the XLA path while
+TPU deployments take the kernels.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg as _fedavg_agg_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.ssm_scan import ssm_scan as _ssm_kernel
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def fedavg_agg(deltas, weights, *, use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return ref.fedavg_agg_ref(deltas, weights)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _fedavg_agg_kernel(deltas, weights, interpret=itp)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, use_pallas: bool = True,
+                    interpret: bool | None = None):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _flash_kernel(q, k, v, causal=causal, window=window, interpret=itp)
+
+
+def ssm_scan(xd, logdecay, Bc, Cc, *, use_pallas: bool = True,
+             interpret: bool | None = None, **kw):
+    if not use_pallas:
+        return ref.ssm_scan_ref(xd, logdecay, Bc, Cc).astype(xd.dtype)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _ssm_kernel(xd, logdecay, Bc, Cc, interpret=itp, **kw)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_agg_ref(deltas, weights):
+    """Trust-weighted server aggregation.
+    deltas: (N, D); weights: (N,) -> (D,) float32."""
+    return jnp.einsum(
+        "n,nd->d", weights.astype(jnp.float32), deltas.astype(jnp.float32)
+    )
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd).  Full-score reference."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * hd**-0.5
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(xd, logdecay, Bc, Cc):
+    """Sequential (exact) SSD recurrence.
+    xd: (B,S,nh,hd) dt-scaled inputs; logdecay: (B,S,nh);
+    Bc,Cc: (B,S,st).  Returns y (B,S,nh,hd) float32."""
+    B, S, nh, hd = xd.shape
+    st = Bc.shape[-1]
+
+    def step(state, inp):
+        x_t, l_t, b_t, c_t = inp
+        a = jnp.exp(l_t)  # (B,nh)
+        upd = jnp.einsum("bs,bnh->bnsh", b_t, x_t)
+        state = state * a[:, :, None, None] + upd
+        y = jnp.einsum("bs,bnsh->bnh", c_t, state)
+        return state, y
+
+    init = jnp.zeros((B, nh, st, hd), jnp.float32)
+    xs = (
+        xd.transpose(1, 0, 2, 3).astype(jnp.float32),
+        logdecay.transpose(1, 0, 2).astype(jnp.float32),
+        Bc.transpose(1, 0, 2).astype(jnp.float32),
+        Cc.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) workload.
+
+No device allocation — the dry-run lowers against these abstract values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.model import VISION_STUB_DIM, Model, decode_cache_len
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    text = S
+    batch = {}
+    if cfg.frontend == "vision_stub":
+        text = S - cfg.num_patches
+        batch["patches"] = sds((B, cfg.num_patches, VISION_STUB_DIM), jnp.float32)
+    batch["tokens"] = sds((B, text), jnp.int32)
+    batch["labels"] = sds((B, text), jnp.int32)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    text = S
+    batch = {}
+    if cfg.frontend == "vision_stub":
+        text = S - cfg.num_patches
+        batch["patches"] = sds((B, cfg.num_patches, VISION_STUB_DIM), jnp.float32)
+    batch["tokens"] = sds((B, text), jnp.int32)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """tokens: one new token; cache: abstract pytree matching init_cache."""
+    B, S = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "tokens": sds((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": sds((), jnp.int32),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    if shape.kind == "train":
+        return train_inputs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

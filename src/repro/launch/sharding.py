@@ -1,0 +1,131 @@
+"""Divisibility-aware sharding policy: FSDP(data) x TP(model) [+ DP(pod)].
+
+``param_spec`` assigns, per parameter leaf:
+  * the largest dim divisible by the ``model`` axis -> tensor/expert parallel
+  * the largest *remaining* dim divisible by ``data`` -> FSDP shard
+  * 1-D scale/bias leaves stay replicated
+Stacked layer params (leading L axis from scan-over-layers) skip dim 0.
+
+This generic rule lands on the canonical placements for every family:
+expert axis (E) -> model; d_ff -> model; heads -> model when divisible
+(minicpm3's 40 heads and gemma3's 4 heads are NOT divisible by 16 -> the
+policy falls back to d_ff/d_model, documented in DESIGN.md §7); d_model or
+vocab -> data.  Optimizer state mirrors params (ZeRO-1 for free).
+
+Batch/cache specs:
+  tokens (B, S)        -> P(dp_axes, None)   [B==1 long-context: replicate]
+  kv cache (L,B,T,K,h) -> B->data, K->model if divisible else T->model
+  ssm cache (L,B,nh,..)-> B->data, nh->model if divisible
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def leaf_spec(shape: Sequence[int], model: int, data: int, *, skip_leading: bool
+              ) -> P:
+    dims = list(shape)
+    start = 1 if skip_leading and len(dims) > 1 else 0
+    entries: list[Optional[str]] = [None] * len(dims)
+    if len(dims) - start >= 2:
+        # model axis: largest divisible dim (prefer trailing dims on ties —
+        # contraction dims live there for our layouts)
+        cands = [
+            (dims[i], i) for i in range(start, len(dims)) if _divisible(dims[i], model)
+        ]
+        mi = None
+        if cands:
+            mi = max(cands, key=lambda t: (t[0], t[1]))[1]
+            entries[mi] = "model"
+        cands = [
+            (dims[i], i)
+            for i in range(start, len(dims))
+            if i != mi and _divisible(dims[i], data)
+        ]
+        if cands:
+            di = max(cands, key=lambda t: (t[0], t[1]))[1]
+            entries[di] = "data"
+    return P(*entries)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, *, policy: str = "fsdp_tp") -> Any:
+    """Spec tree matching an (abstract) params pytree.  Leaves under the
+    'layers' subtree have a stacked leading L axis.
+
+    policy:
+      fsdp_tp  -- TP over `model` + FSDP over `data` (training default)
+      tp_only  -- TP over `model`, replicated over `data`.  For inference:
+                  no optimizer state exists, so paying 16x param memory
+                  buys away every per-layer FSDP all-gather (§Perf)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    data = axes.get("data", 1) if policy == "fsdp_tp" else 1
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "layers" in keys
+        specs.append(
+            leaf_spec(leaf.shape, model, data, skip_leading=stacked)
+        )
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod', 'data') when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp]))
+
+    def one(leaf):
+        B = leaf.shape[0]
+        if _divisible(B, dp_size):
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        if len(dp) == 2 and _divisible(B, dp_size // mesh.devices.shape[0]):
+            # batch divides by data but not pod*data: shard data only
+            return P("data", *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh) -> Any:
+    """Decode-cache specs.  Leaves are stacked (L, B, ...)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    data = axes.get("data", 1)
+
+    def one(leaf):
+        dims = list(leaf.shape)
+        entries: list[Optional[str]] = [None] * len(dims)
+        if len(dims) >= 2 and _divisible(dims[1], data):
+            entries[1] = "data"  # batch
+        # model axis: kv caches (L,B,T,K,hd) prefer heads K, then length T;
+        # ssm/latent caches prefer the first non-batch dim.  Never shard the
+        # trailing feature dim.
+        order = [3, 2] if len(dims) == 5 else list(range(2, len(dims) - 1))
+        for i in order:
+            if i < len(dims) and entries[i] is None and _divisible(dims[i], model):
+                entries[i] = "model"
+                break
+        return P(*entries)
+
+    return jax.tree.map(one, cache_shape)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,241 @@
+"""Attention variants: GQA (full / sliding-window / local-global) and MLA.
+
+Training & prefill use a q-chunked blockwise attention (O(S * chunk) score
+memory) so 32k prefill lowers without materializing (S, S) score matrices.
+Decode uses either a full KV cache (decode_32k) or a ring-buffer window cache
+(long_500k / sliding-window archs).
+
+Optionally routes through the Pallas flash-attention kernel
+(`repro.kernels.ops.flash_attention`) when ``use_pallas=True`` — the pure-XLA
+path below is the lowering used for CPU dry-runs and is numerically identical
+(it is the kernel's reference algorithm).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+Q_CHUNK = 1024  # q-block size for blockwise attention
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads, hd), 0, dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads, hd), 0, dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), 0, dtype),
+        "wo": dense_init(k4, (cfg.num_heads, hd, cfg.d_model), (0, 1), dtype),
+    }
+
+
+def _repeat_kv(k, num_heads):
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head G times."""
+    B, S, K, hd = k.shape
+    if K == num_heads:
+        return k
+    G = num_heads // K
+    return jnp.repeat(k, G, axis=2)
+
+
+def _attend_chunked(q, k, v, q_positions, k_positions, window: int):
+    """Blockwise causal attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, H, hd)
+    q_positions: (Sq,), k_positions: (Sk,) absolute positions.
+    window: 0 = full causal, else sliding window size.
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    scale = hd ** -0.5
+    # branchless window: window may be a traced per-layer value; 0 means full
+    w_eff = jnp.where(jnp.asarray(window) > 0, window, jnp.int32(1 << 30))
+
+    def mask_for(qp, kp):
+        return (kp[None, :] <= qp[:, None]) & (kp[None, :] > qp[:, None] - w_eff)
+
+    if Sq <= Q_CHUNK:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        s = jnp.where(mask_for(q_positions, k_positions)[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    # Triangular chunk loop (python-unrolled, static shapes): q-chunk i
+    # attends only to the causal K prefix k[:(i+1)*C].  Halves attention
+    # FLOPs and f32 score bytes vs masking the full K (§Perf iteration —
+    # self-attention only: q_positions and k_positions are the same range).
+    # REPRO_ATTN_FULLK=1 restores the full-K baseline for A/B measurement.
+    import os as _os
+
+    full_k = _os.environ.get("REPRO_ATTN_FULLK") == "1"
+    n_chunks = Sq // Q_CHUNK
+    outs = []
+    for i in range(n_chunks):
+        qc = q[:, i * Q_CHUNK : (i + 1) * Q_CHUNK]
+        qp = q_positions[i * Q_CHUNK : (i + 1) * Q_CHUNK]
+        kend = k.shape[1] if full_k else (i + 1) * Q_CHUNK
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", qc, k[:, :kend]
+        ).astype(jnp.float32) * scale
+        s = jnp.where(mask_for(qp, k_positions[:kend])[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bhqk,bkhd->bqhd", p, v[:, :kend]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def gqa_forward(params, x, positions, cfg: ModelConfig, window: int = 0):
+    """Training / prefill path. x: (B, S, d); positions: (S,)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    o = _attend_chunked(q, k, v, positions, positions, window)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def gqa_decode(params, cache, x_t, pos, cfg: ModelConfig, window: int = 0):
+    """Single-token decode.  x_t: (B, 1, d); pos: scalar int32 (current index).
+
+    cache holds ``cache_len`` slots; if ``window`` > 0 the cache is a ring
+    buffer of size cache_len == window, else cache_len == max_seq.
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x_t.shape[0]
+    cache_len = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x_t, params["wq"])
+    k_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wk"])
+    v_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wv"])
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv[None], cfg.rope_theta)
+    k_t = apply_rope(k_t, posv[None], cfg.rope_theta)
+
+    slot = pos % cache_len  # == pos whenever cache_len == max_seq (full attn)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_t, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_t, (0, slot, 0, 0))
+
+    # absolute position held by each ring slot (== idx for the full case)
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    slot_pos = pos - ((pos - idx) % cache_len)
+    w_eff = jnp.where(jnp.asarray(window) > 0, window, jnp.int32(1 << 30))
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - w_eff)
+
+    kk = _repeat_kv(k_cache, cfg.num_heads)
+    vv = _repeat_kv(v_cache, cfg.num_heads)
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 7)
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        # q path: d -> q_lora -> per-head (nope + rope)
+        "wq_a": dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), 0, dtype),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, H, qk), 0, dtype),
+        # kv path: d -> (kv_lora latent, shared k_rope)
+        "wkv_a": dense_init(ks[2], (cfg.d_model, cfg.kv_lora_rank), 0, dtype),
+        "wk_rope": dense_init(ks[3], (cfg.d_model, cfg.qk_rope_dim), 0, dtype),
+        # latent -> per-head k_nope and v
+        "wk_b": dense_init(ks[4], (cfg.kv_lora_rank, H, cfg.qk_nope_dim), 0, dtype),
+        "wv_b": dense_init(ks[5], (cfg.kv_lora_rank, H, cfg.v_head_dim), 0, dtype),
+        "wo": dense_init(ks[6], (H, cfg.v_head_dim, cfg.d_model), (0, 1), dtype),
+    }
+
+
+def mla_forward(params, x, positions, cfg: ModelConfig, window: int = 0):
+    """Expanded-form MLA for training / prefill."""
+    H = cfg.num_heads
+    q_lat = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"])  # shared across heads
+    k_rope = apply_rope(k_rope[:, :, None, :], positions[None, :], cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (cfg.qk_rope_dim,))],
+        axis=-1,
+    )
+    o = _attend_chunked(q_full, k_full, v, positions, positions, window)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params, cache, x_t, pos, cfg: ModelConfig, window: int = 0):
+    """Absorbed-form MLA decode: attention runs in the latent space, so the
+    cache stores only (kv_lora + qk_rope) floats per position."""
+    cache_len = cache["ckv"].shape[1]
+    H = cfg.num_heads
+    posv = jnp.full((1,), pos, jnp.int32)
+
+    q_lat = jnp.einsum("bsd,dr->bsr", x_t, params["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])  # (B,1,H,qk)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, posv[None], cfg.rope_theta)
+
+    c_t = jnp.einsum("bsd,dr->bsr", x_t, params["wkv_a"])  # (B,1,r)
+    kr_t = jnp.einsum("bsd,dr->bsr", x_t, params["wk_rope"])
+    kr_t = apply_rope(kr_t[:, :, None, :], posv[None], cfg.rope_theta)[:, :, 0, :]
+
+    slot = pos % cache_len
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_t, (0, slot, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], kr_t, (0, slot, 0))
+
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    slot_pos = pos - ((pos - idx) % cache_len)
+    w_eff = jnp.where(jnp.asarray(window) > 0, window, jnp.int32(1 << 30))
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - w_eff)
+
+    # absorb: q_nope (B,1,H,n) @ wk_b (r,H,n) -> latent query (B,H,r)
+    q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, params["wk_b"])
+    s_lat = jnp.einsum("bhr,btr->bht", q_abs, ckv)  # (B,H,T)
+    s_rope = jnp.einsum("bshk,btk->bht", q_rope, krope)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bht,btr->bhr", p, ckv)  # (B,H,r)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["wv_b"])  # (B,H,v)
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])[:, None, :]
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,147 @@
+"""Per-layer blocks for every architecture family.
+
+A block is (init, forward, decode) over a params dict.  ``model.py`` stacks
+block params with a leading layer axis and scans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.ffn import ffn_forward, init_ffn
+from repro.models.layers import rms_norm
+from repro.models.moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# Attention (+FFN / +MoE) block — dense, moe, vlm, audio families
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,)), "ln2": jnp.zeros((cfg.d_model,))}
+    if cfg.attention == "mla":
+        p["attn"] = attn.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = attn.init_gqa(k1, cfg, dtype)
+    if cfg.num_experts:
+        p["moe"] = init_moe(k2, cfg, dtype)
+        if cfg.dense_residual:
+            k3 = jax.random.fold_in(k2, 1)
+            p["ffn"] = init_ffn(k3, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def attn_block_forward(p, x, positions, cfg: ModelConfig, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a = attn.mla_forward(p["attn"], h, positions, cfg, window)
+    else:
+        a = attn.gqa_forward(p["attn"], h, positions, cfg, window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        mo, aux = moe_forward(p["moe"], h, cfg)
+        if cfg.dense_residual:
+            mo = mo + ffn_forward(p["ffn"], h, cfg.act)
+        x = x + mo
+    else:
+        x = x + ffn_forward(p["ffn"], h, cfg.act)
+    return x, aux
+
+
+def init_attn_block_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    if cfg.attention == "mla":
+        return attn.init_mla_cache(cfg, batch, cache_len, dtype)
+    return attn.init_kv_cache(cfg, batch, cache_len, dtype)
+
+
+def attn_block_decode(p, cache, x_t, pos, cfg: ModelConfig, window):
+    h = rms_norm(x_t, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, cache = attn.mla_decode(p["attn"], cache, h, pos, cfg, window)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cache, h, pos, cfg, window)
+    x = x_t + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        mo, _ = moe_forward(p["moe"], h, cfg)
+        if cfg.dense_residual:
+            mo = mo + ffn_forward(p["ffn"], h, cfg.act)
+        x = x + mo
+    else:
+        x = x + ffn_forward(p["ffn"], h, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block — ssm / hybrid families
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": jnp.zeros((cfg.d_model,)),
+        "mamba": ssm_mod.init_mamba2(key, cfg, dtype),
+    }
+
+
+def mamba_block_forward(p, x, cfg: ModelConfig, unroll_chunks: bool = False):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    return x + ssm_mod.mamba2_forward(p["mamba"], h, cfg,
+                                      unroll_chunks=unroll_chunks)
+
+
+def init_mamba_block_cache(cfg: ModelConfig, batch: int, dtype):
+    return ssm_mod.init_mamba2_cache(cfg, batch, dtype)
+
+
+def mamba_block_decode(p, cache, x_t, cfg: ModelConfig):
+    h = rms_norm(x_t, p["ln"], cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_decode(p["mamba"], cache, h, cfg)
+    return x_t + y, cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM pair block (sLSTM sublayer + mLSTM sublayer)
+# ---------------------------------------------------------------------------
+
+def init_xlstm_pair(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_s": jnp.zeros((cfg.d_model,)),
+        "slstm": xlstm_mod.init_slstm(k1, cfg, dtype),
+        "ln_m": jnp.zeros((cfg.d_model,)),
+        "mlstm": xlstm_mod.init_mlstm(k2, cfg, dtype),
+    }
+
+
+def xlstm_pair_forward(p, x, cfg: ModelConfig, unroll_chunks: bool = False):
+    h = rms_norm(x, p["ln_s"], cfg.norm_eps)
+    x = x + xlstm_mod.slstm_forward(p["slstm"], h, cfg)
+    h = rms_norm(x, p["ln_m"], cfg.norm_eps)
+    x = x + xlstm_mod.mlstm_forward(p["mlstm"], h, cfg,
+                                    unroll_chunks=unroll_chunks)
+    return x
+
+
+def init_xlstm_pair_cache(cfg: ModelConfig, batch: int):
+    return {
+        "slstm": xlstm_mod.init_slstm_cache(cfg, batch),
+        "mlstm": xlstm_mod.init_mlstm_cache(cfg, batch),
+    }
+
+
+def xlstm_pair_decode(p, cache, x_t, cfg: ModelConfig):
+    h = rms_norm(x_t, p["ln_s"], cfg.norm_eps)
+    y, cs = xlstm_mod.slstm_decode(p["slstm"], cache["slstm"], h, cfg)
+    x = x_t + y
+    h = rms_norm(x, p["ln_m"], cfg.norm_eps)
+    y, cm = xlstm_mod.mlstm_decode(p["mlstm"], cache["mlstm"], h, cfg)
+    return x + y, {"slstm": cs, "mlstm": cm}

@@ -1,0 +1,24 @@
+"""Gated-MLP (SwiGLU / GeGLU) feed-forward."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import activation, dense_init
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+
+
+def ffn_forward(params, x, act: str = "silu"):
+    f = activation(act)
+    g = f(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, params["w_down"])

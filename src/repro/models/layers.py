@@ -1,0 +1,45 @@
+"""Shared neural-net layers: RMSNorm, rotary embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    """Variance-scaling (fan-in) init used for all projection matrices."""
+    fan_in = np.prod([shape[a] for a in (in_axis if isinstance(in_axis, tuple) else (in_axis,))])
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

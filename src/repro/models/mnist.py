@@ -1,0 +1,68 @@
+"""The paper's client model: a small MLP digit classifier (§IV).
+
+The paper flattens 28x28 images to 784-vectors, trains with local SGD and
+SparseCategoricalCrossentropy, and randomly assigns Softmax or ReLU
+"activation" per robot (Table II) — we honor that as the hidden activation.
+Pure-jnp, vmap-able over a population of clients (each client's params are a
+pytree leaf with a leading client axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fedar_mnist import MnistConfig
+
+
+def init_mnist(key, cfg: MnistConfig):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / cfg.input_dim) ** 0.5
+    s2 = (2.0 / cfg.hidden) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (cfg.input_dim, cfg.hidden)) * s1,
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.num_classes)) * s2,
+        "b2": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def mnist_logits(params, x, activation=0):
+    """activation: 0 = ReLU, 1 = Softmax (Table II assigns one per robot).
+    Accepts a traced int so a fleet can be vmapped with mixed activations."""
+    h = x @ params["w1"] + params["b1"]
+    act = jnp.asarray(activation)
+    h = jnp.where(act == 1, jax.nn.softmax(h, axis=-1), jax.nn.relu(h))
+    return h @ params["w2"] + params["b2"]
+
+
+def mnist_loss(params, x, y, activation=0):
+    lg = mnist_logits(params, x, activation)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def mnist_accuracy(params, x, y, activation=0):
+    return jnp.mean(jnp.argmax(mnist_logits(params, x, activation), -1) == y)
+
+
+def local_sgd(params, x, y, *, lr: float, batch_size: int, epochs: int,
+              activation=0):
+    """ClientUpdate (Algorithm 2 lines 16-21): split local data into batches,
+    run E epochs of SGD.  x: (n, 784), y: (n,) — n must divide by batch."""
+    n = x.shape[0]
+    nb = n // batch_size
+    xb = x[: nb * batch_size].reshape(nb, batch_size, -1)
+    yb = y[: nb * batch_size].reshape(nb, batch_size)
+    grad_fn = jax.grad(mnist_loss)
+
+    def epoch(params, _):
+        def step(params, b):
+            g = grad_fn(params, b[0], b[1], activation)
+            return jax.tree.map(lambda p, gg: p - lr * gg, params, g), None
+
+        params, _ = jax.lax.scan(step, params, (xb, yb))
+        return params, None
+
+    params, _ = jax.lax.scan(epoch, params, None, length=epochs)
+    return params

@@ -1,0 +1,408 @@
+"""Composable model: embeddings + scanned block stack + LM head.
+
+Three structural kinds cover the 10 assigned architectures:
+  attn   -- homogeneous attention blocks (dense / moe / vlm / audio)
+  xlstm  -- scanned (sLSTM, mLSTM) pairs
+  zamba  -- scanned Mamba2 blocks + ONE weight-shared attention block applied
+            after every ``shared_attn_every``-th layer (Zamba2)
+
+Layer params are stacked with a leading L axis and applied with
+``jax.lax.scan`` (optionally rematerialized) so HLO size is depth-independent
+— a hard requirement for compiling 81-layer configs against a 512-device
+mesh on the CPU host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models import blocks
+from repro.models.layers import dense_init, embed_init, rms_norm
+
+VISION_STUB_DIM = 1024  # InternViT output dim fed by the stubbed frontend
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full attention)."""
+    L = cfg.num_layers
+    if cfg.global_every:
+        return np.array(
+            [
+                cfg.local_window if (l + 1) % cfg.global_every else cfg.sliding_window
+                for l in range(L)
+            ],
+            np.int32,
+        )
+    return np.full((L,), cfg.sliding_window, np.int32)
+
+
+def decode_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Uniform per-layer cache length for decode."""
+    w = layer_windows(cfg)
+    if (w == 0).any():
+        return seq_len
+    return int(w.max())
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            self.kind = "zamba"
+        elif cfg.family == "ssm" and "s" in cfg.block_pattern:
+            self.kind = "xlstm"
+        else:
+            self.kind = "attn"
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Dict[str, Any]:
+        cfg, dtype = self.cfg, self.dtype
+        ke, kl, kh, kv = jax.random.split(key, 4)
+        p: Dict[str, Any] = {
+            "embed": embed_init(ke, (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": jnp.zeros((cfg.d_model,)),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab_size), 0, dtype)
+        if cfg.frontend == "vision_stub":
+            p["vision_proj"] = dense_init(kv, (VISION_STUB_DIM, cfg.d_model), 0, dtype)
+
+        if self.kind == "attn":
+            keys = jax.random.split(kl, cfg.num_layers)
+            p["layers"] = jax.vmap(
+                lambda k: blocks.init_attn_block(k, cfg, dtype)
+            )(keys)
+        elif self.kind == "xlstm":
+            n_pairs = cfg.num_layers // 2
+            keys = jax.random.split(kl, n_pairs)
+            p["layers"] = jax.vmap(
+                lambda k: blocks.init_xlstm_pair(k, cfg, dtype)
+            )(keys)
+        else:  # zamba
+            keys = jax.random.split(kl, cfg.num_layers)
+            p["layers"] = jax.vmap(
+                lambda k: blocks.init_mamba_block(k, cfg, dtype)
+            )(keys)
+            p["shared_attn"] = blocks.init_attn_block(
+                jax.random.fold_in(kl, 7), cfg, dtype
+            )
+        return p
+
+    # ------------------------------------------------------------------
+    # embedding / head helpers
+    # ------------------------------------------------------------------
+    def embed(self, params, batch):
+        """Returns (x (B, T, d), text_offset)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        offset = 0
+        if cfg.frontend == "vision_stub":
+            pe = jnp.einsum(
+                "bpv,vd->bpd", batch["patches"].astype(self.dtype), params["vision_proj"]
+            )
+            x = jnp.concatenate([pe, x], axis=1)
+            offset = pe.shape[1]
+        return x, offset
+
+    def logits(self, params, x):
+        head = (
+            params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        )
+        return jnp.einsum("...d,dv->...v", x, head)
+
+    # ------------------------------------------------------------------
+    # forward trunk (train / prefill)
+    # ------------------------------------------------------------------
+    def trunk(self, params, batch, remat: bool = True, unroll: bool = False):
+        """Returns (x_final (B,T,d), aux_loss, text_offset).
+
+        ``unroll=True`` replaces scan-over-layers with a python loop — used by
+        the roofline pass because XLA cost_analysis counts a scan body once
+        regardless of trip count (see benchmarks/roofline.py)."""
+        cfg = self.cfg
+        x, offset = self.embed(params, batch)
+        T = x.shape[1]
+        positions = jnp.arange(T, dtype=jnp.int32)
+        windows = jnp.asarray(layer_windows(cfg))
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if unroll:
+            aux = aux0
+            wnp = layer_windows(cfg)
+            if self.kind == "zamba":
+                shared = params["shared_attn"]
+            n_iter = cfg.num_layers if self.kind != "xlstm" else cfg.num_layers // 2
+            for i in range(n_iter):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                if self.kind == "attn":
+                    x, a = blocks.attn_block_forward(
+                        lp, x, positions, cfg, int(wnp[i])
+                    )
+                    aux = aux + a
+                elif self.kind == "xlstm":
+                    x = blocks.xlstm_pair_forward(lp, x, cfg, unroll_chunks=True)
+                else:
+                    x = blocks.mamba_block_forward(lp, x, cfg, unroll_chunks=True)
+                    if (i + 1) % cfg.shared_attn_every == 0:
+                        x, _ = blocks.attn_block_forward(
+                            shared, x, positions, cfg, cfg.sliding_window
+                        )
+            return rms_norm(x, params["final_norm"], cfg.norm_eps), aux, offset
+
+        if self.kind == "attn":
+            def body(carry, scanned):
+                xx, aux = carry
+                lp, w = scanned
+                xx, a = blocks.attn_block_forward(lp, xx, positions, cfg, w)
+                return (xx, aux + a), None
+
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), (params["layers"], windows))
+            return rms_norm(x, params["final_norm"], cfg.norm_eps), aux, offset
+
+        if self.kind == "xlstm":
+            def body(carry, lp):
+                return blocks.xlstm_pair_forward(lp, carry, cfg), None
+
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            return rms_norm(x, params["final_norm"], cfg.norm_eps), aux0, offset
+
+        # zamba: mamba stack + shared attention block every k layers
+        k_every = cfg.shared_attn_every
+        shared = params["shared_attn"]
+
+        def body(carry, scanned):
+            xx = carry
+            lp, idx = scanned
+            xx = blocks.mamba_block_forward(lp, xx, cfg)
+            def with_attn(h):
+                out, _ = blocks.attn_block_forward(
+                    shared, h, positions, cfg, jnp.int32(cfg.sliding_window)
+                )
+                return out
+            xx = jax.lax.cond(
+                (idx + 1) % k_every == 0, with_attn, lambda h: h, xx
+            )
+            return xx, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        x, _ = jax.lax.scan(body, x, (params["layers"], idxs))
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux0, offset
+
+    def forward(self, params, batch, remat: bool = True, unroll: bool = False):
+        x, aux, offset = self.trunk(params, batch, remat, unroll)
+        return self.logits(params, x), aux
+
+    def prefill(self, params, batch, remat: bool = True, unroll: bool = False):
+        """Serving prefill: logits for the LAST position only."""
+        x, _, _ = self.trunk(params, batch, remat, unroll)
+        return self.logits(params, x[:, -1, :])
+
+    # ------------------------------------------------------------------
+    # loss
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, remat: bool = True, loss_chunk: int = 0,
+             unroll: bool = False):
+        """Causal LM loss.  batch: tokens (B,S) [+patches], labels (B,S)."""
+        cfg = self.cfg
+        x, aux, offset = self.trunk(params, batch, remat, unroll)
+        x = x[:, offset:, :]  # text positions only (vlm)
+        labels = batch["labels"]
+        B, S = labels.shape
+        # predict labels[t] from x[t]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        def ce(xc, yc):
+            lg = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        if loss_chunk and S % loss_chunk == 0 and S > loss_chunk:
+            nc = S // loss_chunk
+            xc = x.reshape(B, nc, loss_chunk, -1).transpose(1, 0, 2, 3)
+            yc = labels.reshape(B, nc, loss_chunk).transpose(1, 0, 2)
+
+            def body(tot, inp):
+                return tot + ce(*inp), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+        else:
+            total = ce(x, labels)
+        nll = total / (B * S)
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    def loss_per_example(self, params, batch, remat: bool = True,
+                         loss_chunk: int = 0, unroll: bool = False):
+        """Per-row mean NLL (B,) — used by the FedAR cohort-weighted step."""
+        cfg = self.cfg
+        x, aux, offset = self.trunk(params, batch, remat, unroll)
+        x = x[:, offset:, :]
+        labels = batch["labels"]
+        B, S = labels.shape
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        def ce(xc, yc):
+            lg = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold, axis=-1)  # (B,)
+
+        if loss_chunk and S % loss_chunk == 0 and S > loss_chunk:
+            nc = S // loss_chunk
+            xc = x.reshape(B, nc, loss_chunk, -1).transpose(1, 0, 2, 3)
+            yc = labels.reshape(B, nc, loss_chunk).transpose(1, 0, 2)
+
+            def body(tot, inp):
+                return tot + ce(*inp), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((B,), jnp.float32), (xc, yc))
+        else:
+            total = ce(x, labels)
+        return total / S, aux
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int):
+        cfg, dtype = self.cfg, self.dtype
+        clen = decode_cache_len(cfg, seq_len)
+
+        def stack(one, n):
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), one
+            )
+
+        if self.kind == "attn":
+            one = blocks.init_attn_block_cache(cfg, batch, clen, dtype)
+            return stack(one, cfg.num_layers)
+        if self.kind == "xlstm":
+            one = blocks.init_xlstm_pair_cache(cfg, batch)
+            return stack(one, cfg.num_layers // 2)
+        # zamba
+        n_attn = cfg.num_layers // cfg.shared_attn_every
+        return {
+            "mamba": stack(
+                blocks.init_mamba_block_cache(cfg, batch, dtype), cfg.num_layers
+            ),
+            "attn": stack(
+                blocks.init_attn_block_cache(cfg, batch, clen, dtype), n_attn
+            ),
+        }
+
+    def decode_step(self, params, cache, tokens, pos, unroll: bool = False):
+        """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (index of
+        the new token).  Returns (logits (B, vocab), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        windows = jnp.asarray(layer_windows(cfg))
+
+        if unroll:
+            wnp = layer_windows(cfg)
+
+            def stack(trees):
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+            if self.kind == "attn":
+                ncs = []
+                for i in range(cfg.num_layers):
+                    lp = jax.tree.map(lambda t: t[i], params["layers"])
+                    lc = jax.tree.map(lambda t: t[i], cache)
+                    x, nc = blocks.attn_block_decode(lp, lc, x, pos, cfg, int(wnp[i]))
+                    ncs.append(nc)
+                new_cache = stack(ncs)
+            elif self.kind == "xlstm":
+                ncs = []
+                for i in range(cfg.num_layers // 2):
+                    lp = jax.tree.map(lambda t: t[i], params["layers"])
+                    lc = jax.tree.map(lambda t: t[i], cache)
+                    x, nc = blocks.xlstm_pair_decode(lp, lc, x, cfg)
+                    ncs.append(nc)
+                new_cache = stack(ncs)
+            else:  # zamba
+                shared = params["shared_attn"]
+                mcs, acs = [], []
+                for i in range(cfg.num_layers):
+                    lp = jax.tree.map(lambda t: t[i], params["layers"])
+                    lc = jax.tree.map(lambda t: t[i], cache["mamba"])
+                    x, nmc = blocks.mamba_block_decode(lp, lc, x, cfg)
+                    mcs.append(nmc)
+                    if (i + 1) % cfg.shared_attn_every == 0:
+                        j = (i + 1) // cfg.shared_attn_every - 1
+                        ac = jax.tree.map(lambda t: t[j], cache["attn"])
+                        x, nac = blocks.attn_block_decode(
+                            shared, ac, x, pos, cfg, cfg.sliding_window
+                        )
+                        acs.append(nac)
+                new_cache = {"mamba": stack(mcs), "attn": stack(acs)}
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            return self.logits(params, x[:, 0, :]), new_cache
+
+        if self.kind == "attn":
+            def body(xx, scanned):
+                lp, lc, w = scanned
+                xx, nc = blocks.attn_block_decode(lp, lc, xx, pos, cfg, w)
+                return xx, nc
+
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows))
+        elif self.kind == "xlstm":
+            def body(xx, scanned):
+                lp, lc = scanned
+                xx, nc = blocks.xlstm_pair_decode(lp, lc, xx, cfg)
+                return xx, nc
+
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:  # zamba
+            k_every = cfg.shared_attn_every
+            shared = params["shared_attn"]
+            w = jnp.int32(cfg.sliding_window)
+
+            def body(carry, scanned):
+                xx, attn_caches = carry
+                lp, lc, idx = scanned
+                xx, nmc = blocks.mamba_block_decode(lp, lc, xx, cfg)
+                j = jnp.maximum((idx + 1) // k_every - 1, 0)
+
+                def with_attn(op):
+                    h, ac = op
+                    one = jax.tree.map(lambda t: t[j], ac)
+                    h, one = blocks.attn_block_decode(shared, one, h, pos, cfg, w)
+                    ac = jax.tree.map(
+                        lambda t, o: jax.lax.dynamic_update_index_in_dim(t, o, j, 0),
+                        ac,
+                        one,
+                    )
+                    return h, ac
+
+                xx, attn_caches = jax.lax.cond(
+                    (idx + 1) % k_every == 0,
+                    with_attn,
+                    lambda op: op,
+                    (xx, attn_caches),
+                )
+                return (xx, attn_caches), nmc
+
+            idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+            (x, attn_caches), mamba_caches = jax.lax.scan(
+                body, (x, cache["attn"]), (params["layers"], cache["mamba"], idxs)
+            )
+            new_cache = {"mamba": mamba_caches, "attn": attn_caches}
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.logits(params, x[:, 0, :]), new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))

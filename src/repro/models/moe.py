@@ -1,0 +1,168 @@
+"""Mixture-of-experts FFN: GShard-style grouped top-k dispatch with capacity.
+
+Supports:
+  * routed experts, top-k (iterative top-1) with capacity factor
+  * shared (always-on) experts with a sigmoid shared-gate (Qwen2-MoE)
+  * a parallel dense residual FFN (Snowflake Arctic) — handled in blocks.py
+  * Switch-style load-balance auxiliary loss
+
+Expert weights carry a leading E axis so the sharding policy can place them
+on the `model` mesh axis (expert parallelism); grouped one-hot dispatch keeps
+the all-to-all dense and static.  Groups shard over the `data` axis and the
+expert axis of the dispatched activations shards over `model`, so the
+(G, n, E, C) dispatch tensor stays O(10 MB)/device at the assigned shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.ffn import ffn_forward, init_ffn
+from repro.models.layers import activation, dense_init
+
+MAX_GROUP = 1024  # tokens per dispatch group
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    E, d, ffe = cfg.num_experts, cfg.d_model, cfg.resolved_moe_d_ff
+    p = {
+        "router": dense_init(ks[0], (d, E), 0, jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, ffe), 1, dtype),
+        "w_up": dense_init(ks[2], (E, d, ffe), 1, dtype),
+        "w_down": dense_init(ks[3], (E, ffe, d), 1, dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_ffn(ks[4], d, cfg.num_shared_experts * ffe, dtype)
+        p["shared_gate"] = dense_init(ks[5], (d, 1), 0, jnp.float32)
+    return p
+
+
+def _route_topk(probs, k: int, capacity: int):
+    """probs: (G, n, E) -> dispatch combine weights (G, n, E, C)."""
+    G, n, E = probs.shape
+    remaining = probs
+    dispatch = jnp.zeros((G, n, E, capacity), jnp.float32)
+    fill = jnp.zeros((G, E), jnp.int32)
+    for _ in range(k):
+        gate = jnp.max(remaining, axis=-1)  # (G, n)
+        idx = jnp.argmax(remaining, axis=-1)  # (G, n)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (G, n, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + fill[:, None, :]  # (G, n, E)
+        pos_tok = jnp.sum(pos * onehot, axis=-1)  # (G, n)
+        keep = pos_tok < capacity
+        disp = (
+            onehot.astype(jnp.float32)[..., None]
+            * jax.nn.one_hot(pos_tok, capacity, dtype=jnp.float32)[:, :, None, :]
+            * (keep * gate)[..., None, None]
+        )
+        dispatch = dispatch + disp
+        fill = fill + jnp.sum(onehot * keep[..., None].astype(jnp.int32), axis=1)
+        remaining = remaining * (1.0 - onehot.astype(probs.dtype))
+    return dispatch
+
+
+def _route_indices(probs, k: int, capacity: int):
+    """probs: (G, n, E) -> (idx, pos, gate) each (G, n, k); gate is 0 for
+    capacity-dropped assignments."""
+    G, n, E = probs.shape
+    remaining = probs
+    fill = jnp.zeros((G, E), jnp.int32)
+    idxs, poss, gates = [], [], []
+    for _ in range(k):
+        gate = jnp.max(remaining, axis=-1)
+        idx = jnp.argmax(remaining, axis=-1)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + fill[:, None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1)
+        keep = pos_tok < capacity
+        idxs.append(idx)
+        poss.append(jnp.minimum(pos_tok, capacity - 1))
+        gates.append(gate * keep)
+        fill = fill + jnp.sum(onehot * keep[..., None].astype(jnp.int32), axis=1)
+        remaining = remaining * (1.0 - onehot.astype(probs.dtype))
+    stack = lambda xs: jnp.stack(xs, axis=-1)  # (G, n, k)
+    return stack(idxs), stack(poss), stack(gates)
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, d).  Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    N = B * S
+    group = min(MAX_GROUP, N)
+    pad = (-N) % group
+    xt = x.reshape(N, d)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)], axis=0)
+    G = xt.shape[0] // group
+    xt = xt.reshape(G, group, d)
+
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    capacity = max(int(group * k * cfg.moe_capacity_factor / E), 4)
+    f = activation(cfg.act)
+
+    if cfg.moe_dispatch == "scatter":
+        idx, pos, gate = _route_indices(probs, k, capacity)  # (G, n, k)
+        gsum = jnp.sum(gate, axis=-1, keepdims=True) + 1e-9
+        gate_n = (gate / gsum).astype(x.dtype)
+        # aux loss
+        me = jnp.mean(probs, axis=1)  # (G, E)
+        disp1 = jax.nn.one_hot(idx, E, dtype=jnp.float32) * (gate > 0)[..., None]
+        ce = jnp.mean(jnp.sum(disp1, axis=2), axis=1)  # (G, E)
+        aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+        def one_group(xg, idxg, posg, gateg):
+            # xg (n, d); idxg/posg/gateg (n, k)
+            xin = jnp.zeros((E, capacity, d), x.dtype)
+            for j in range(k):
+                xin = xin.at[idxg[:, j], posg[:, j]].add(
+                    xg * (gateg[:, j] > 0)[:, None].astype(x.dtype)
+                )
+            return xin
+
+        xin = jax.vmap(one_group)(xt, idx, pos, gate)  # (G, E, C, d)
+        xin = xin.transpose(1, 0, 2, 3)  # (E, G, C, d) — all-to-all boundary
+        h = f(jnp.einsum("egcd,edf->egcf", xin, params["w_gate"])) * jnp.einsum(
+            "egcd,edf->egcf", xin, params["w_up"]
+        )
+        eo = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+        eo_g = eo.transpose(1, 0, 2, 3)  # (G, E, C, d)
+
+        def gather_group(eog, idxg, posg, gateg):
+            out = jnp.zeros((eog.shape[-1],), x.dtype)
+            outs = 0.0
+            for j in range(k):
+                outs = outs + gateg[:, j, None] * eog[idxg[:, j], posg[:, j]]
+            return outs
+
+        out = jax.vmap(gather_group)(eo_g, idx, pos, gate_n)  # (G, n, d)
+    else:
+        dispatch = _route_topk(probs, k, capacity)  # (G, n, E, C)
+        denom = jnp.sum(dispatch, axis=(2, 3), keepdims=True) + 1e-9
+        combine = (dispatch / denom).astype(x.dtype)
+        dmask = (dispatch > 0).astype(x.dtype)
+
+        # load-balance aux (Switch): E * mean_e(frac_dispatched * mean_prob)
+        me = jnp.mean(probs, axis=1)  # (G, E)
+        ce = jnp.mean((dispatch.sum(3) > 0).astype(jnp.float32), axis=1)  # (G, E)
+        aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+        xin = jnp.einsum("gnec,gnd->egcd", dmask, xt)  # all-to-all boundary
+        h = f(jnp.einsum("egcd,edf->egcf", xin, params["w_gate"])) * jnp.einsum(
+            "egcd,edf->egcf", xin, params["w_up"]
+        )
+        eo = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+        out = jnp.einsum("gnec,egcd->gnd", combine, eo)  # all-to-all back
+
+    out = out.reshape(G * group, d)[:N].reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x.astype(jnp.float32), params["shared_gate"])
+        ).astype(x.dtype)
+        out = out + sg * ffn_forward(params["shared"], x, cfg.act)
+    return out, aux * cfg.router_aux_coef

@@ -1,0 +1,180 @@
+"""Mamba2 (chunked SSD) block — TPU-adapted.
+
+The GPU reference implementation relies on fused CUDA scans; here the chunked
+"state-space dual" algorithm maps onto TPU as: per-chunk quadratic part (MXU
+matmuls inside VMEM-sized tiles) + an inter-chunk ``lax.scan`` carrying the
+(nh, state, hd) SSM state.  The Pallas kernel `repro.kernels.ssm_scan`
+implements the same algorithm with explicit BlockSpecs; this module is the
+XLA lowering used by dry-runs and CPU tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d, st = cfg.d_model, cfg.ssm_state
+    d_inner, nh = ssm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        # De-fused input projections (one per role).  A single fused
+        # (d, 2*d_inner+2*st+nh) matrix forces a full all-gather of its
+        # model-sharded output before the z/x/B/C/dt split — de-fusing lets
+        # each output keep its own sharding (EXPERIMENTS.md §Perf, zamba2
+        # iteration 2).  Same total FLOPs.
+        "wz": dense_init(ks[0], (d, d_inner), 0, dtype),
+        "wx": dense_init(ks[1], (d, d_inner), 0, dtype),
+        "wB": dense_init(ks[2], (d, st), 0, dtype),
+        "wC": dense_init(ks[3], (d, st), 0, dtype),
+        "wdt": dense_init(ks[4], (d, nh), 0, dtype),
+        "conv_w": dense_init(ks[5], (cfg.ssm_conv, d_inner), 0, dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32) + jnp.log(
+            jnp.linspace(1.0, 16.0, nh)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[6], (d_inner, d), 0, dtype),
+    }
+
+
+def _project(params, x):
+    """Per-role input projections: z, x, B, C, dt."""
+    z = jnp.einsum("...d,dk->...k", x, params["wz"])
+    xs = jnp.einsum("...d,dk->...k", x, params["wx"])
+    Bc = jnp.einsum("...d,ds->...s", x, params["wB"])
+    Cc = jnp.einsum("...d,ds->...s", x, params["wC"])
+    dt = jnp.einsum("...d,dn->...n", x, params["wdt"])
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(x, w):
+    """x: (B, S, d_inner); w: (K, d_inner) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(xd, logdecay, Bc, Cc, chunk: int, init_state=None,
+                unroll_chunks: bool = False):
+    """Chunked state-space dual scan.
+
+    xd: (B, S, nh, hd)  -- dt-scaled inputs
+    logdecay: (B, S, nh) -- log a_t = dt * A  (<= 0)
+    Bc, Cc: (B, S, st)   -- input/output projections (shared across heads)
+    Returns (y (B,S,nh,hd), final_state (B,nh,st,hd)).
+    """
+    B, S, nh, hd = xd.shape
+    st = Bc.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xs = xd.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    ls = logdecay.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+    Bs = Bc.reshape(B, nc, chunk, st).transpose(1, 0, 2, 3)
+    Cs = Cc.reshape(B, nc, chunk, st).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, nh, st, hd), jnp.float32)
+
+    def body(state, inp):
+        xc, lc, bc, cc = inp  # (B,L,nh,hd), (B,L,nh), (B,L,st), (B,L,st)
+        lcum = jnp.cumsum(lc, axis=1)  # (B,L,nh) inclusive
+        # --- inter-chunk: y_i += C_i . (exp(lcum_i) * state_prev)
+        yin = jnp.einsum(
+            "bls,bnsh,bln->blnh",
+            cc.astype(jnp.float32),
+            state,
+            jnp.exp(lcum),
+        )
+        # --- intra-chunk quadratic
+        cb = jnp.einsum("bis,bjs->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        gap = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,i,j,nh)
+        L = jnp.where(
+            (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, :, :, None],
+            jnp.exp(gap),
+            0.0,
+        )
+        yintra = jnp.einsum("bij,bijn,bjnh->binh", cb, L, xd_f := xc.astype(jnp.float32))
+        # --- chunk state contribution
+        tail = lcum[:, -1:, :] - lcum  # (B,L,nh) decay from j to end of chunk
+        cstate = jnp.einsum("bjs,bjn,bjnh->bnsh", bc.astype(jnp.float32), jnp.exp(tail), xd_f)
+        new_state = state * jnp.exp(lcum[:, -1])[:, :, None, None] + cstate
+        return new_state, (yin + yintra).astype(xd.dtype)
+
+    if unroll_chunks:
+        # python loop: honest cost_analysis accounting (a lax.scan body is
+        # counted once regardless of trip count) — roofline mode only
+        state, ys = init_state, []
+        for i in range(nc):
+            state, yc = body(state, (xs[i], ls[i], Bs[i], Cs[i]))
+            ys.append(yc)
+        y = jnp.stack(ys).transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+        return y, state
+    final, ys = jax.lax.scan(body, init_state, (xs, ls, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return y, final
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, unroll_chunks: bool = False):
+    """Training / prefill.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    d_inner, nh = ssm_dims(cfg)
+    z, xs, Bc, Cc, dt = _project(params, x)
+    xs = _causal_conv(xs, params["conv_w"])
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,) negative
+    xh = xs.reshape(B, S, nh, cfg.ssm_head_dim)
+    xd = xh * dt[..., None].astype(xh.dtype)
+    logdecay = dt * A  # (B,S,nh)
+    y, _ = ssd_chunked(xd, logdecay, Bc, Cc, min(cfg.ssm_chunk, S),
+                       unroll_chunks=unroll_chunks)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, nh = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(params, cache, x_t, cfg: ModelConfig):
+    """Single-token recurrent step.  x_t: (B, 1, d)."""
+    B = x_t.shape[0]
+    d_inner, nh = ssm_dims(cfg)
+    z, xs, Bc, Cc, dt = _project(params, x_t[:, 0])
+    # conv over (cached K-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B,K,d_inner)
+    xs = jnp.einsum("bkd,kd->bd", hist, params["conv_w"])
+    new_conv = hist[:, 1:]
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)  # (B,nh)
+    xh = xs.reshape(B, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    upd = jnp.einsum("bs,bnh->bnsh", Bc.astype(jnp.float32), xh * dt[..., None])
+    state = cache["ssm"] * a[:, :, None, None] + upd
+    y = jnp.einsum("bs,bnsh->bnh", Cc.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssm": state}

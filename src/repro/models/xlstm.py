@@ -1,0 +1,216 @@
+"""xLSTM blocks: sLSTM (scalar-memory recurrent) and mLSTM (matrix memory).
+
+TPU adaptation notes (DESIGN.md §3): the mLSTM trains with a chunkwise-
+parallel linear-attention form (normalizer folded in as an extra value
+channel); the sLSTM is an exact stabilized recurrence via ``lax.scan`` over
+time (inherently sequential — the paper itself notes sLSTM is not
+parallelizable).  Decode is the exact recurrence for both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+MLSTM_EXPAND = 2
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = MLSTM_EXPAND * cfg.d_model
+    hd = d_inner // cfg.num_heads
+    return d_inner, cfg.num_heads, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, nh, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wqkv": dense_init(ks[0], (d, 3, nh, hd), 0, dtype),
+        "wif": dense_init(ks[1], (d, 2, nh), 0, jnp.float32),
+        "if_bias": jnp.concatenate(
+            [jnp.full((1, nh), -3.0), jnp.full((1, nh), 3.0)]
+        ),  # small input gate, open forget gate at init
+        "wo_gate": dense_init(ks[2], (d, d_inner), 0, dtype),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, d), 0, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, logf, logi, chunk: int, init_state=None,
+                   unroll_chunks: bool = False):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: (B,S,nh,hd); logf, logi: (B,S,nh).
+    Normalizer is channel hd of an augmented v' = [v, 1].
+    Returns y (B,S,nh,hd).
+    """
+    B, S, nh, hd = q.shape
+    nc = S // chunk
+    vp = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    iw = jnp.exp(logi)  # input gate weight
+    qs = q.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nc, chunk, nh, hd + 1).transpose(1, 0, 2, 3, 4)
+    ls = logf.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+    iws = iw.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, nh, hd, hd + 1), jnp.float32)
+
+    def body(state, inp):
+        qc, kc, vc, lc, ic = inp
+        qf = qc.astype(jnp.float32) * hd ** -0.5
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32) * ic[..., None]
+        lcum = jnp.cumsum(lc, axis=1)  # (B,L,nh)
+        yin = jnp.einsum("blnk,bnkv,bln->blnv", qf, state, jnp.exp(lcum))
+        qk = jnp.einsum("bink,bjnk->bijn", qf, kf)
+        gap = lcum[:, :, None, :] - lcum[:, None, :, :]
+        Lm = jnp.where(
+            (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, :, :, None],
+            jnp.exp(gap),
+            0.0,
+        )
+        yintra = jnp.einsum("bijn,bjnv->binv", qk * Lm, vf)
+        tail = lcum[:, -1:, :] - lcum
+        cstate = jnp.einsum("bjnk,bjn,bjnv->bnkv", kf, jnp.exp(tail), vf)
+        new_state = state * jnp.exp(lcum[:, -1])[:, :, None, None] + cstate
+        return new_state, yin + yintra
+
+    if unroll_chunks:
+        state, ys = init_state, []
+        for i in range(nc):
+            state, yc = body(state, (qs[i], ks_[i], vs[i], ls[i], iws[i]))
+            ys.append(yc)
+        ys = jnp.stack(ys)
+        final = state
+    else:
+        final, ys = jax.lax.scan(body, init_state, (qs, ks_, vs, ls, iws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd + 1)
+    num, den = y[..., :hd], y[..., hd:]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    return out.astype(q.dtype), final
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, chunk: int = 128,
+                  unroll_chunks: bool = False):
+    B, S, d = x.shape
+    d_inner, nh, hd = mlstm_dims(cfg)
+    qkv = jnp.einsum("bsd,dthk->tbshk", x, params["wqkv"])
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    gates = (
+        jnp.einsum("bsd,dtn->bstn", x.astype(jnp.float32), params["wif"])
+        + params["if_bias"]
+    )
+    logi = gates[:, :, 0]  # pre-activation input gate (log domain)
+    logf = jax.nn.log_sigmoid(gates[:, :, 1])
+    y, _ = _mlstm_chunked(q, k, v, logf, logi, min(chunk, S),
+                          unroll_chunks=unroll_chunks)
+    y = y.reshape(B, S, d_inner)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x, params["wo_gate"]))
+    y = rms_norm(y * o, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d_inner, nh, hd = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, hd, hd + 1), jnp.float32)}
+
+
+def mlstm_decode(params, cache, x_t, cfg: ModelConfig):
+    B = x_t.shape[0]
+    d_inner, nh, hd = mlstm_dims(cfg)
+    qkv = jnp.einsum("bsd,dthk->tbshk", x_t, params["wqkv"])[:, :, 0]
+    q, k, v = (a.astype(jnp.float32) for a in (qkv[0], qkv[1], qkv[2]))
+    gates = (
+        jnp.einsum("bd,dtn->btn", x_t[:, 0].astype(jnp.float32), params["wif"])
+        + params["if_bias"]
+    )
+    i = jnp.exp(gates[:, 0])  # (B, nh)
+    f = jnp.exp(jax.nn.log_sigmoid(gates[:, 1]))
+    vp = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    upd = jnp.einsum("bnk,bnv,bn->bnkv", k, vp, i)
+    C = cache["C"] * f[:, :, None, None] + upd
+    y = jnp.einsum("bnk,bnkv->bnv", q * hd ** -0.5, C)
+    num, den = y[..., :hd], y[..., hd:]
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, d_inner)
+    o = jax.nn.sigmoid(jnp.einsum("bd,dk->bk", x_t[:, 0], params["wo_gate"]))
+    y = rms_norm(y.astype(x_t.dtype) * o, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None], {"C": C}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg: ModelConfig):
+    hd = cfg.d_model // cfg.num_heads
+    return cfg.num_heads, hd
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh, hd = slstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], (d, 4, nh, hd), 0, jnp.float32),  # i,f,z,o
+        "r": dense_init(ks[1], (4, nh, hd, hd), 2, jnp.float32) * 0.1,
+        "bias": jnp.zeros((4, nh, hd)).at[1].set(3.0),  # open forget gate
+        "out_proj": dense_init(ks[2], (d, d), 0, dtype),
+    }
+
+
+def _slstm_step(params, state, xg):
+    """One stabilized sLSTM step.  xg: (B, 4, nh, hd) input pre-activations."""
+    h, c, n, m = state
+    rec = jnp.einsum("bnh,gnhk->bgnk", h, params["r"])
+    pre = xg + rec + params["bias"]
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(zt)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    nh, hd = slstm_dims(cfg)
+    xg = jnp.einsum("bsd,dgnk->sbgnk", x.astype(jnp.float32), params["wx"])
+
+    def body(state, xt):
+        new = _slstm_step(params, state, xt)
+        return new, new[0]
+
+    z = jnp.zeros((B, nh, hd), jnp.float32)
+    init = (z, z, z, z - 1e9)
+    _, hs = jax.lax.scan(body, init, xg)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return jnp.einsum("bsd,dk->bsk", y, params["out_proj"])
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    nh, hd = slstm_dims(cfg)
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z - 1e9}
+
+
+def slstm_decode(params, cache, x_t, cfg: ModelConfig):
+    B = x_t.shape[0]
+    nh, hd = slstm_dims(cfg)
+    xg = jnp.einsum("bd,dgnk->bgnk", x_t[:, 0].astype(jnp.float32), params["wx"])
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_step(params, state, xg)
+    y = h.reshape(B, cfg.d_model).astype(x_t.dtype)
+    out = jnp.einsum("bd,dk->bk", y, params["out_proj"])[:, None]
+    return out, {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, make_optimizer
+from repro.optim.schedule import make_schedule

@@ -1,0 +1,111 @@
+"""Pure-JAX optimizers (no optax in the container): SGD, momentum, AdamW.
+
+API mirrors optax: ``opt.init(params) -> state``, ``opt.update(grads, state,
+params, step) -> (updates, state)`` where updates are ADDED to params.
+Optimizer state mirrors the param tree, so the sharding policy's param specs
+apply verbatim (ZeRO-1-style placement comes for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def _clip(grads, max_norm):
+    if not max_norm:
+        return grads
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_optimizer(tc: TrainConfig, schedule=None) -> Optimizer:
+    if schedule is None:
+        schedule = lambda step: tc.lr
+
+    if tc.optimizer == "sgd":
+
+        def init(params):
+            return ()
+
+        def update(grads, state, params, step):
+            grads = _clip(grads, tc.grad_clip)
+            lr = schedule(step)
+            upd = jax.tree.map(lambda g: (-lr * g).astype(g.dtype), grads)
+            return upd, state
+
+        return Optimizer(init, update)
+
+    if tc.optimizer == "momentum":
+
+        def init(params):
+            return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+        def update(grads, state, params, step):
+            grads = _clip(grads, tc.grad_clip)
+            lr = schedule(step)
+            mu = jax.tree.map(
+                lambda m, g: tc.momentum * m + g, state["mu"], grads
+            )
+            upd = jax.tree.map(lambda m: (-lr * m).astype(m.dtype), mu)
+            return upd, {"mu": mu}
+
+        return Optimizer(init, update)
+
+    if tc.optimizer == "adamw":
+
+        def init(params):
+            return {
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            }
+
+        def update(grads, state, params, step):
+            grads = _clip(grads, tc.grad_clip)
+            lr = schedule(step)
+            t = step.astype(jnp.float32) + 1.0
+            m = jax.tree.map(
+                lambda m_, g: tc.b1 * m_ + (1 - tc.b1) * g.astype(jnp.float32),
+                state["m"],
+                grads,
+            )
+            v = jax.tree.map(
+                lambda v_, g: tc.b2 * v_
+                + (1 - tc.b2) * jnp.square(g.astype(jnp.float32)),
+                state["v"],
+                grads,
+            )
+            bc1 = 1 - tc.b1**t
+            bc2 = 1 - tc.b2**t
+
+            def upd_fn(m_, v_, p):
+                u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + tc.eps)
+                u = u + tc.weight_decay * p.astype(jnp.float32)
+                return (-lr * u).astype(p.dtype)
+
+            upd = jax.tree.map(upd_fn, m, v, params)
+            return upd, {"m": m, "v": v}
+
+        return Optimizer(init, update)
+
+    raise ValueError(f"unknown optimizer {tc.optimizer!r}")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,28 @@
+"""LR schedules: constant, linear warmup + cosine decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    if tc.schedule == "const" and not tc.warmup_steps:
+        return lambda step: tc.lr
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        if tc.schedule == "cosine":
+            frac = jnp.clip(
+                (step - tc.warmup_steps)
+                / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0
+        return tc.lr * warm * decay
+
+    return sched

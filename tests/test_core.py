@@ -1,0 +1,167 @@
+"""Resources, selection, aggregation, foolsgold unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common.config import FedConfig
+from repro.core import aggregation as agg
+from repro.core.foolsgold import foolsgold_weights, update_history
+from repro.core.resources import (
+    ResourceState,
+    TaskRequirement,
+    check_resource,
+    drain_battery,
+    make_fleet,
+    round_latency,
+)
+from repro.core.selection import select_clients
+from repro.core.trust import init_trust
+
+FED = FedConfig()
+
+
+# ---------------------------------------------------------------------------
+# resources
+# ---------------------------------------------------------------------------
+
+def test_fleet_has_starved_clients():
+    res, poison = make_fleet(12)
+    req = TaskRequirement()
+    ra = np.asarray(check_resource(res, req))
+    # the two resource-starved robots (indices 8, 9) must fail CheckResource
+    assert not ra[8] and not ra[9]
+    assert poison[10] and poison[11]
+    assert ra[:8].all()
+
+
+def test_battery_drain_and_recharge():
+    res, _ = make_fleet(4, num_starved=0, num_poisoners=0)
+    part = jnp.array([True, False, False, False])
+    res2 = drain_battery(res, part)
+    assert float(res2.battery[0]) < float(res.battery[0])
+    assert float(res2.battery[1]) >= float(res.battery[1])
+
+
+def test_latency_monotone_in_compute():
+    res, _ = make_fleet(6, num_starved=0, num_poisoners=0)
+    res = res._replace(compute=jnp.array([10.0, 20, 40, 80, 160, 320]),
+                       bandwidth=jnp.ones(6))
+    lat = round_latency(res, train_flops=1e8, model_bytes=1e6,
+                        key=jax.random.PRNGKey(0), jitter=0.0)
+    assert np.all(np.diff(np.asarray(lat)) < 0)  # faster compute -> lower latency
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+def test_selection_respects_resources_and_trust():
+    res, _ = make_fleet(12)
+    trust = init_trust(12, FED)
+    # client 0 banned below threshold
+    trust = trust._replace(score=trust.score.at[0].set(-5.0))
+    sel, ok = select_clients(jax.random.PRNGKey(0), trust, res, TaskRequirement(), FED)
+    sel, ok = np.asarray(sel), np.asarray(ok)
+    assert not sel[0] and not ok[0]  # banned
+    assert not sel[8] and not sel[9]  # resource-starved
+    assert sel.sum() == max(1, int(12 * FED.client_fraction))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_selection_count_invariant(seed):
+    res, _ = make_fleet(12, seed=seed % 7)
+    trust = init_trust(12, FED)
+    sel, ok = select_clients(jax.random.PRNGKey(seed), trust, res,
+                             TaskRequirement(), FED)
+    sel = np.asarray(sel)
+    assert sel.sum() <= max(1, int(12 * FED.client_fraction))
+    assert np.all(sel <= np.asarray(ok))  # selected => eligible
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+def test_fedavg_weighted_mean():
+    g = jnp.zeros(4)
+    deltas = jnp.array([[1.0, 0, 0, 0], [0, 1.0, 0, 0]])
+    w = jnp.array([3.0, 1.0])
+    mask = jnp.array([True, True])
+    out = agg.fedavg_aggregate(g, deltas, w, mask)
+    np.testing.assert_allclose(out, [0.75, 0.25, 0, 0])
+
+
+def test_fedavg_mask_excludes():
+    g = jnp.zeros(2)
+    deltas = jnp.array([[1.0, 1.0], [5.0, 5.0]])
+    w = jnp.ones(2)
+    out = agg.fedavg_aggregate(g, deltas, w, jnp.array([True, False]))
+    np.testing.assert_allclose(out, [1.0, 1.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_fedavg_convex_hull(seed):
+    """Aggregated update stays in the convex hull of client deltas."""
+    k = jax.random.PRNGKey(seed)
+    deltas = jax.random.normal(k, (5, 3))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (5,)) + 0.01
+    out = agg.fedavg_aggregate(jnp.zeros(3), deltas, w, jnp.ones(5, bool))
+    lo = np.asarray(deltas).min(0) - 1e-5
+    hi = np.asarray(deltas).max(0) + 1e-5
+    assert np.all(np.asarray(out) >= lo) and np.all(np.asarray(out) <= hi)
+
+
+def test_async_fold_order_matters_and_is_bounded():
+    fed = FED
+    g = jnp.zeros(2)
+    models = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    w = jnp.ones(2)
+    mask = jnp.ones(2, bool)
+    out = agg.async_aggregate(g, models, w, mask, jnp.array([0, 1]), fed)
+    out2 = agg.async_aggregate(g, models, w, mask, jnp.array([1, 0]), fed)
+    assert not np.allclose(out, out2)  # arrival order matters (async semantics)
+    # later arrival dominates under the mixing rule
+    assert out[1] > out[0]
+
+
+def test_deviation_mask_flags_outlier():
+    deltas = jnp.concatenate([jnp.ones((9, 4)) * 0.1, jnp.ones((1, 4)) * 50.0])
+    active = jnp.ones(10, bool)
+    dev = np.asarray(agg.deviation_mask(deltas, active, gamma=2.0))
+    assert dev[9] and not dev[:9].any()
+
+
+def test_deviation_ignores_inactive():
+    deltas = jnp.concatenate([jnp.ones((9, 4)) * 0.1, jnp.ones((1, 4)) * 50.0])
+    active = jnp.ones(10, bool).at[9].set(False)
+    dev = np.asarray(agg.deviation_mask(deltas, active, gamma=2.0))
+    assert not dev.any()
+
+
+# ---------------------------------------------------------------------------
+# foolsgold
+# ---------------------------------------------------------------------------
+
+def test_foolsgold_downweights_sybils():
+    k = jax.random.PRNGKey(0)
+    honest = jax.random.normal(k, (6, 32))
+    sybil_dir = jax.random.normal(jax.random.fold_in(k, 1), (1, 32))
+    sybils = jnp.tile(sybil_dir, (3, 1)) + 0.01 * jax.random.normal(
+        jax.random.fold_in(k, 2), (3, 32)
+    )
+    hist = update_history(jnp.zeros((9, 32)), jnp.concatenate([honest, sybils]),
+                          jnp.ones(9, bool))
+    w = np.asarray(foolsgold_weights(hist, jnp.ones(9, bool)))
+    assert w[6:].max() < 0.2  # sybils crushed
+    assert w[:6].min() > 0.6  # honest mostly kept
+
+
+def test_foolsgold_weights_in_unit_interval():
+    hist = jax.random.normal(jax.random.PRNGKey(3), (8, 16))
+    w = np.asarray(foolsgold_weights(hist, jnp.ones(8, bool)))
+    assert np.all(w >= 0) and np.all(w <= 1)

@@ -1,0 +1,110 @@
+"""Decode correctness: token-by-token serve_step must reproduce the full
+forward pass for every structural kind (attn / GQA / MLA / MoE / zamba /
+xlstm), including ring-buffer sliding-window caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+
+T = 12
+
+
+def run_decode(model, params, toks, cache_len):
+    cache = model.init_cache(toks.shape[0], cache_len)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache = step(params, cache, toks[:, t : t + 1], jnp.int32(t))
+        outs.append(lg)
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["tinyllama-1.1b", "gemma3-1b", "minicpm3-4b", "zamba2-7b", "xlstm-350m",
+     "qwen2-moe-a2.7b", "arctic-480b", "musicgen-medium", "yi-9b"],
+)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)  # dropless
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks}, remat=False)
+    dec = run_decode(model, params, toks, T)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_vlm_decode_after_patch_prefill():
+    """VLM: decode text after priming the cache with patch positions."""
+    cfg = get_config("internvl2-1b").reduced()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    P_, Ttx = cfg.num_patches, 8
+    patches = jax.random.normal(jax.random.PRNGKey(2), (2, P_, 1024))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, Ttx), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks, "patches": patches}, remat=False)
+
+    # prime cache by decoding the projected patch embeddings step-by-step
+    cache = model.init_cache(2, P_ + Ttx)
+    step = jax.jit(model.decode_step)
+    pe = jnp.einsum("bpv,vd->bpd", patches.astype(model.dtype), params["vision_proj"])
+
+    # decode patch positions via embeddings: reuse decode_step internals by
+    # temporarily embedding patches through the same block path
+    from repro.models import blocks
+    from repro.models.layers import rms_norm
+    from repro.models.model import layer_windows
+
+    def embed_step(x_t, cache, pos):
+        windows = jnp.asarray(layer_windows(cfg))
+
+        def body(xx, scanned):
+            lp, lc, w = scanned
+            xx, nc = blocks.attn_block_decode(lp, lc, xx, pos, cfg, w)
+            return xx, nc
+
+        x, new_cache = jax.lax.scan(body, x_t, (params["layers"], cache, windows))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return model.logits(params, x[:, 0, :]), new_cache
+
+    jembed = jax.jit(embed_step)
+    for p in range(P_):
+        _, cache = jembed(pe[:, p : p + 1, :], cache, jnp.int32(p))
+    outs = []
+    for t in range(Ttx):
+        lg, cache = step(params, cache, toks[:, t : t + 1], jnp.int32(P_ + t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full[:, P_:], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_ring_buffer_window_decode():
+    """Sliding-window ring cache (cache_len < seq) matches a windowed forward."""
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b").reduced(), sliding_window=8
+    )
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks}, remat=False)
+    dec = run_decode(model, params, toks, 20)  # cache_len = window = 8
+    from repro.models.model import decode_cache_len
+
+    assert decode_cache_len(cfg, 20) == 8
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )

@@ -1,0 +1,137 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+
+# ---------------------------------------------------------------------------
+# fedavg_agg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,D", [(12, 1000), (64, 8192), (3, 97), (1, 2048), (256, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_agg_sweep(N, D, dtype):
+    k = jax.random.PRNGKey(N * 7 + D)
+    deltas = jax.random.normal(k, (N, D), dtype)
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (N,))
+    got = fedavg_agg(deltas, w, interpret=True)
+    want = ref.fedavg_agg_ref(deltas, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), d=st.integers(1, 500), seed=st.integers(0, 99))
+def test_fedavg_agg_property(n, d, seed):
+    k = jax.random.PRNGKey(seed)
+    deltas = jax.random.normal(k, (n, d))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (n,))
+    got = fedavg_agg(deltas, w, interpret=True, block_d=256)
+    np.testing.assert_allclose(got, ref.fedavg_agg_ref(deltas, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fedavg_agg_zero_weights():
+    deltas = jnp.ones((4, 100))
+    got = fedavg_agg(deltas, jnp.zeros(4), interpret=True)
+    assert np.allclose(got, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "B,S,H,hd,window,bq,bk",
+    [
+        (2, 256, 4, 64, 0, 64, 64),
+        (1, 256, 2, 128, 64, 64, 64),
+        (2, 128, 3, 32, 0, 32, 64),
+        (1, 512, 1, 64, 128, 128, 128),
+        (3, 128, 2, 64, 16, 32, 32),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, hd, window, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd), dtype) for kk in ks)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_first_row_is_v0():
+    """Causal row 0 attends only to position 0."""
+    B, S, H, hd = 1, 64, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks)
+    out = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "B,S,nh,hd,st_,chunk,hb",
+    [
+        (2, 64, 8, 32, 16, 16, 4),
+        (1, 128, 4, 64, 64, 32, 4),
+        (2, 96, 2, 16, 8, 32, 2),
+        (1, 256, 8, 32, 32, 64, 8),
+    ],
+)
+def test_ssm_scan_sweep(B, S, nh, hd, st_, chunk, hb):
+    ks = jax.random.split(jax.random.PRNGKey(S * nh), 4)
+    xd = jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5
+    logdecay = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    Bc = jax.random.normal(ks[2], (B, S, st_)) * 0.5
+    Cc = jax.random.normal(ks[3], (B, S, st_)) * 0.5
+    got = ssm_scan(xd, logdecay, Bc, Cc, chunk=chunk, head_block=hb, interpret=True)
+    want = ref.ssm_scan_ref(xd, logdecay, Bc, Cc)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_scan_matches_model_path():
+    """Kernel == the model's XLA ssd_chunked == exact recurrence."""
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, S, nh, hd, st_ = 2, 64, 4, 32, 16
+    xd = jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5
+    logdecay = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    Bc = jax.random.normal(ks[2], (B, S, st_)) * 0.5
+    Cc = jax.random.normal(ks[3], (B, S, st_)) * 0.5
+    want = ref.ssm_scan_ref(xd, logdecay, Bc, Cc)
+    kern = ssm_scan(xd, logdecay, Bc, Cc, chunk=16, head_block=4, interpret=True)
+    xla, _ = ssd_chunked(xd, logdecay, Bc, Cc, 16)
+    np.testing.assert_allclose(kern, want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(xla, want, rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decay_zero_state_passthrough():
+    """With logdecay = -inf (full reset) y_t depends only on step t."""
+    B, S, nh, hd, st_ = 1, 32, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    xd = jax.random.normal(ks[0], (B, S, nh, hd))
+    Bc = jax.random.normal(ks[1], (B, S, st_))
+    Cc = jax.random.normal(ks[2], (B, S, st_))
+    logdecay = jnp.full((B, S, nh), -100.0)
+    got = ssm_scan(xd, logdecay, Bc, Cc, chunk=8, head_block=2, interpret=True)
+    want = jnp.einsum("bls,bls->bl", Cc, Bc)[..., None, None] * xd
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,168 @@
+"""Optimizers, data pipeline, checkpointing, sharding policy tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import TrainConfig
+from repro.data.federated import TABLE_II, dirichlet_partition, table2_fleet
+from repro.data.synthetic import make_digits, token_stream
+from repro.launch.sharding import leaf_spec
+from repro.optim.optimizers import apply_updates, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+def test_optimizer_minimizes_quadratic(name):
+    tc = TrainConfig(optimizer=name, lr=0.1)
+    opt = make_optimizer(tc)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for step in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(g, state, params, jnp.int32(step))
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    tc = TrainConfig(optimizer="sgd", lr=1.0, grad_clip=1.0)
+    opt = make_optimizer(tc)
+    g = {"w": jnp.array([30.0, 40.0])}  # norm 50
+    upd, _ = opt.update(g, opt.init(g), g, jnp.int32(0))
+    assert abs(float(jnp.linalg.norm(upd["w"])) - 1.0) < 1e-5
+
+
+def test_adamw_state_dtype_fp32():
+    tc = TrainConfig(optimizer="adamw")
+    opt = make_optimizer(tc)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    st_ = opt.init(params)
+    assert st_["m"]["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_digits_learnable_classes():
+    x, y = make_digits(200, [0, 1, 2], seed=1)
+    assert x.shape == (200, 784) and set(np.unique(y)) <= {0, 1, 2}
+    assert x.min() >= 0 and x.max() <= 1
+
+
+def test_digits_label_flip():
+    x0, y0 = make_digits(500, seed=2, flip_frac=0.0)
+    x1, y1 = make_digits(500, seed=2, flip_frac=0.5)
+    assert (y0 != y1).mean() > 0.3
+
+
+def test_table2_partition_matches_paper():
+    data = table2_fleet()
+    assert data["x"].shape[0] == 12
+    sizes = data["sizes"].astype(int).tolist()
+    assert sizes == [r[2] for r in TABLE_II]
+    acts = data["activations"].tolist()
+    assert acts == [r[1] for r in TABLE_II]
+    # robot 3 (idx 2) holds only labels {0,1,2,3} in its first n samples
+    y2 = data["y"][2][:400]
+    assert set(np.unique(y2)) <= {0, 1, 2, 3}
+
+
+def test_dirichlet_partition_covers_all():
+    x, y = make_digits(600, seed=3)
+    parts = dirichlet_partition(x, y, 8, alpha=0.3, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 600 and len(np.unique(allidx)) == 600
+
+
+def test_token_stream_shapes():
+    b = next(token_stream(1, 4, 16, 100, seed=0))
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # labels are next-token shifted
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.ckpt import restore, save
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+    }
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, tree, step=17)
+    got, step = restore(path, jax.tree.map(lambda x: x, tree))
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    from repro.checkpoint.ckpt import restore, save
+
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore(path, {"a": jnp.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# sharding policy
+# ---------------------------------------------------------------------------
+
+def test_leaf_spec_expert_weights():
+    # (E, d, ff): E -> model? ff is larger. largest divisible -> d_ff? For
+    # (128, 7168, 4864) with model=16: largest divisible dim is 7168.
+    spec = leaf_spec((128, 7168, 4864), 16, 16, skip_leading=False)
+    assert "model" in spec and "data" in spec
+
+
+def test_leaf_spec_scalar_replicated():
+    assert leaf_spec((1152,), 16, 16, skip_leading=False) == P(None)
+
+
+def test_leaf_spec_indivisible_falls_back():
+    # minicpm3 embed (73448, 2560): vocab not divisible by 16
+    spec = leaf_spec((73448, 2560), 16, 16, skip_leading=False)
+    assert spec[0] is None and spec[1] == "model"
+
+
+def test_leaf_spec_stacked_skips_layer_axis():
+    spec = leaf_spec((22, 2048, 5632), 16, 16, skip_leading=True)
+    assert spec[0] is None
+    assert "model" in spec[1:]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 8192), min_size=1, max_size=4),
+    model=st.sampled_from([1, 8, 16]),
+    data=st.sampled_from([1, 8, 16]),
+    skip=st.booleans(),
+)
+def test_leaf_spec_always_valid(dims, model, data, skip):
+    """Every assigned axis must divide its dim; axes never repeat."""
+    spec = leaf_spec(tuple(dims), model, data, skip_leading=skip)
+    assert len(spec) == len(dims)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used))
+    for d, s in zip(dims, spec):
+        if s == "model":
+            assert d % model == 0
+        if s == "data":
+            assert d % data == 0

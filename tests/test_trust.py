@@ -1,0 +1,146 @@
+"""Trust engine unit + property tests (Table I / Algorithm 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common.config import FedConfig
+from repro.core.trust import TrustState, eligible, init_trust, update_trust
+
+FED = FedConfig()
+N = 6
+
+
+def masks(**kw):
+    base = dict(
+        selected=jnp.zeros(N, bool),
+        on_time=jnp.zeros(N, bool),
+        deviated=jnp.zeros(N, bool),
+        interested=jnp.zeros(N, bool),
+    )
+    for k, v in kw.items():
+        base[k] = jnp.asarray(v, bool)
+    return base
+
+
+def test_initial_score_is_50():
+    t = init_trust(N, FED)
+    assert np.all(np.asarray(t.score) == 50.0)
+
+
+def test_reward_on_time():
+    t = init_trust(N, FED)
+    sel = [True] + [False] * (N - 1)
+    t2 = update_trust(t, FED, **masks(selected=sel, on_time=sel))
+    assert t2.score[0] == 50 + 8  # C_Reward
+    assert np.all(np.asarray(t2.score[1:]) == 50)
+
+
+def test_interested_plus_one():
+    t = init_trust(N, FED)
+    inter = [False, True] + [False] * (N - 2)
+    t2 = update_trust(t, FED, **masks(interested=inter))
+    assert t2.score[1] == 51  # C_Interested
+
+
+def test_first_failure_is_penalty_band():
+    # Algorithm 1: the bands use the LIFETIME failure rate.  After the very
+    # first failure the rate is 1.0 >= 0.5 -> ban band.  Build a history of
+    # successes first so the rate lands in each band.
+    t = init_trust(1, FED)
+    fed = FED
+    sel = jnp.ones(1, bool)
+    # 9 successes -> rate after 1 failure = 1/10 < 0.2 -> penalty
+    for _ in range(9):
+        t = update_trust(t, fed, selected=sel, on_time=sel,
+                         deviated=jnp.zeros(1, bool), interested=jnp.zeros(1, bool))
+    s_before = float(t.score[0])
+    t = update_trust(t, fed, selected=sel, on_time=jnp.zeros(1, bool),
+                     deviated=jnp.zeros(1, bool), interested=jnp.zeros(1, bool))
+    assert float(t.score[0]) == s_before + fed.c_penalty
+
+
+def test_blame_band():
+    # 2 successes then failures until rate in [0.2, 0.5)
+    t = init_trust(1, FED)
+    sel = jnp.ones(1, bool)
+    off = jnp.zeros(1, bool)
+    for _ in range(3):
+        t = update_trust(t, FED, selected=sel, on_time=sel, deviated=off, interested=off)
+    s = float(t.score[0])
+    t = update_trust(t, FED, selected=sel, on_time=off, deviated=off, interested=off)
+    # rate = 1/4 = 0.25 in [0.2, 0.5) -> blame
+    assert float(t.score[0]) == s + FED.c_blame
+
+
+def test_ban_band_rate():
+    t = init_trust(1, FED)
+    sel = jnp.ones(1, bool)
+    off = jnp.zeros(1, bool)
+    s = float(t.score[0])
+    t = update_trust(t, FED, selected=sel, on_time=off, deviated=off, interested=off)
+    # first failure: rate 1.0 >= 0.5 -> ban
+    assert float(t.score[0]) == s + FED.c_ban
+
+
+def test_deviation_is_immediate_ban():
+    t = init_trust(1, FED)
+    sel = jnp.ones(1, bool)
+    t2 = update_trust(t, FED, selected=sel, on_time=sel,
+                      deviated=sel, interested=jnp.zeros(1, bool))
+    assert float(t2.score[0]) == 50 + FED.c_ban
+
+
+def test_eligibility_threshold():
+    t = TrustState(
+        score=jnp.array([-1.0, 0.0, 50.0]),
+        participations=jnp.zeros(3, jnp.int32),
+        failures=jnp.zeros(3, jnp.int32),
+    )
+    el = eligible(t, FED)
+    assert list(np.asarray(el)) == [False, True, True]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sel=st.lists(st.booleans(), min_size=N, max_size=N),
+    ont=st.lists(st.booleans(), min_size=N, max_size=N),
+    dev=st.lists(st.booleans(), min_size=N, max_size=N),
+    inter=st.lists(st.booleans(), min_size=N, max_size=N),
+)
+def test_trust_delta_bounded(sel, ont, dev, inter):
+    """One round can move trust by at most C_Reward upward and C_Ban down."""
+    t = init_trust(N, FED)
+    t2 = update_trust(t, FED, **masks(selected=sel, on_time=ont,
+                                      deviated=dev, interested=inter))
+    delta = np.asarray(t2.score - t.score)
+    assert np.all(delta <= FED.c_reward)
+    assert np.all(delta >= FED.c_ban)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sel=st.lists(st.booleans(), min_size=N, max_size=N),
+    ont=st.lists(st.booleans(), min_size=N, max_size=N),
+)
+def test_unselected_never_punished(sel, ont):
+    t = init_trust(N, FED)
+    t2 = update_trust(t, FED, **masks(selected=sel, on_time=ont))
+    delta = np.asarray(t2.score - t.score)
+    unsel = ~np.asarray(sel)
+    assert np.all(delta[unsel] >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(failures=st.integers(0, 20), successes=st.integers(0, 20))
+def test_failure_counting(failures, successes):
+    t = init_trust(1, FED)
+    sel = jnp.ones(1, bool)
+    off = jnp.zeros(1, bool)
+    for _ in range(successes):
+        t = update_trust(t, FED, selected=sel, on_time=sel, deviated=off, interested=off)
+    for _ in range(failures):
+        t = update_trust(t, FED, selected=sel, on_time=off, deviated=off, interested=off)
+    assert int(t.participations[0]) == failures + successes
+    assert int(t.failures[0]) == failures
