@@ -1,0 +1,98 @@
+"""Engine throughput: python-loop driver vs fully-jitted scan engine.
+
+Measures communication rounds/sec at fleet sizes N in {12, 128, 512, 2048}
+for (a) the seed-style python loop — one eager dispatch per round with host
+round-trips for the history rows — and (b) the ``lax.scan`` engine, which
+compiles once and keeps all R rounds on-device.
+
+Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
+Emits ``BENCH_engine.json`` (rounds/sec per fleet size) for the perf
+trajectory; also wired into ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fedar_mnist import fleet_fed, small_model
+from repro.core.engine import FedAREngine
+from repro.core.resources import TaskRequirement
+from repro.data.federated import scaled_fleet
+
+FLEET_SIZES = (12, 128, 512, 2048)
+QUICK_SIZES = (12, 128)
+SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
+
+
+def _make(n: int):
+    fed = fleet_fed(n, local_epochs=1, local_batch_size=20, foolsgold=False)
+    engine = FedAREngine(small_model(32), fed, TaskRequirement())
+    data = {
+        k: jnp.asarray(v)
+        for k, v in scaled_fleet(n, samples_per_client=SAMPLES).items()
+    }
+    return engine, data
+
+
+def _time_python(engine, data, rounds: int) -> float:
+    state = engine.init_state()
+    # one untimed round absorbs first-touch costs (weight init transfers)
+    state, _ = engine.run_python_loop(state, data, rounds=1)
+    t0 = time.perf_counter()
+    engine.run_python_loop(state, data, rounds=rounds)
+    return (time.perf_counter() - t0) / rounds
+
+
+def _time_scan(engine, data, rounds: int) -> float:
+    state = engine.init_state()
+    jax.block_until_ready(engine.run(state, data, rounds=rounds))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(engine.run(state, data, rounds=rounds))
+    return (time.perf_counter() - t0) / rounds
+
+
+def bench(quick: bool = False):
+    """Returns (csv rows, per-fleet-size summary dict)."""
+    rows, summary = [], {}
+    for n in QUICK_SIZES if quick else FLEET_SIZES:
+        engine, data = _make(n)
+        # keep wall time sane as the fleet grows
+        r_py = max(2, 8 // max(1, n // 128))
+        r_scan = max(4, 16 // max(1, n // 512))
+        s_py = _time_python(engine, data, r_py)
+        s_scan = _time_scan(engine, data, r_scan)
+        rps_py, rps_scan = 1.0 / s_py, 1.0 / s_scan
+        speedup = rps_scan / rps_py
+        rows.append((f"engine_python_N{n}", round(s_py * 1e6, 1),
+                     round(rps_py, 2)))
+        rows.append((f"engine_scan_N{n}", round(s_scan * 1e6, 1),
+                     round(rps_scan, 2)))
+        rows.append((f"engine_speedup_N{n}", 0.0, round(speedup, 2)))
+        summary[str(n)] = {
+            "python_rounds_per_sec": rps_py,
+            "scan_rounds_per_sec": rps_scan,
+            "speedup": speedup,
+        }
+    return rows, summary
+
+
+def write_json(summary, path: str = "BENCH_engine.json") -> None:
+    with open(path, "w") as f:
+        json.dump({"rounds_per_sec": summary}, f, indent=2)
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    rows, summary = bench(quick=quick)
+    write_json(summary)
+    print("name,us_per_round,rounds_per_sec_or_speedup")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

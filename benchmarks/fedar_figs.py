@@ -112,7 +112,12 @@ def selection_ablation():
         ("fedar", FedConfig(timeout=8.0, local_epochs=2)),
         ("fedavg_sync", FedConfig(timeout=8.0, local_epochs=2, aggregation="fedavg")),
         ("random_sel", FedConfig(timeout=8.0, local_epochs=2, selection="random")),
-        ("async", FedConfig(timeout=8.0, local_epochs=2, aggregation="async")),
+        # the paper-era FedAsync sequential fold (the named baseline) ...
+        ("async_seq", FedConfig(timeout=8.0, local_epochs=2,
+                                aggregation="async_seq")),
+        # ... and the engine's buffered no-wait mode for comparison
+        ("async_buffered", FedConfig(timeout=8.0, local_epochs=2,
+                                     aggregation="async")),
     ]:
         hist, us = _run(fed, force=force)
         vtime = float(np.sum(hist["round_time"]))

@@ -16,7 +16,7 @@ from repro.kernels.ssm_scan import ssm_scan
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # warm up / compile
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

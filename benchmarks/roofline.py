@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.common.config import INPUT_SHAPES
-from repro.configs import ARCH_IDS, cfg_for_shape, get_config
+from repro.configs import get_config
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 DRYRUN_PATH = os.environ.get("DRYRUN_PATH", "dryrun_all.jsonl")

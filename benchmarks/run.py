@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import fedar_figs, kernels_bench, roofline
+    from benchmarks import engine_bench, fedar_figs, kernels_bench, roofline
 
     rows = []
     rows += fedar_figs.table1_trust_events()
@@ -21,6 +21,9 @@ def main() -> None:
         rows += fedar_figs.fig8_straggler_effect()
         rows += fedar_figs.selection_ablation()
         rows += fedar_figs.poisoning_defense()
+    engine_rows, engine_summary = engine_bench.bench(quick=quick)
+    engine_bench.write_json(engine_summary)  # BENCH_engine.json perf trail
+    rows += engine_rows
     rows += kernels_bench.bench()
     rows += roofline.rows()
 

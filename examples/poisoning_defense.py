@@ -6,7 +6,6 @@ degrade accuracy.
 Run:  PYTHONPATH=src python examples/poisoning_defense.py
 """
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig

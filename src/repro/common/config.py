@@ -8,8 +8,8 @@ optimizer / schedule / batching knobs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -163,6 +163,10 @@ class FedConfig:
     """FedAR hyper-parameters.  Trust constants are Table I of the paper."""
 
     num_clients: int = 12
+    # fleet heterogeneity: None -> scale the paper's 2-of-12 profile with the
+    # fleet (see resources.make_fleet fractions); int -> exact count
+    num_starved: Optional[int] = None
+    num_poisoners: Optional[int] = None
     client_fraction: float = 0.5  # F in Algorithm 2
     local_epochs: int = 5  # E
     local_batch_size: int = 20  # B (paper simulation setting)
@@ -179,8 +183,16 @@ class FedConfig:
     penalty_band: float = 0.2  # failure rate < 0.2 -> penalty
     blame_band: float = 0.5  # [0.2, 0.5) -> blame; >= 0.5 -> ban
     min_trust: float = 0.0  # clients below this are ineligible
-    # aggregation mode: fedavg | fedar (timeout skip) | async (staleness)
+    # aggregation mode:
+    #   fedavg    -- synchronous, waits for stragglers
+    #   fedar     -- the paper: timeout skip
+    #   async     -- buffered no-wait (FedBuff-style fixed-size buffer with
+    #                staleness-discounted merging; scales to 512-4096 clients)
+    #   async_seq -- legacy FedAsync sequential fold in arrival order (O(N))
     aggregation: str = "fedar"
+    # weighted-reduction backend for the hot aggregation path:
+    # auto (Pallas kernel on TPU, einsum elsewhere) | kernel | einsum
+    agg_impl: str = "auto"
     # client selection: "trust" (FedAR, Alg 2 line 8) | "random" (the
     # random-selection baseline the paper argues against)
     selection: str = "trust"

@@ -1,6 +1,7 @@
 """The paper's own simulation setting (§IV): 12 mobile robots, 28x28 digit
-classification, MLP trained with local SGD (B=20, E=5 default)."""
-from dataclasses import dataclass
+classification, MLP trained with local SGD (B=20, E=5 default) — plus a
+fleet-size-parameterized variant for engine-scale runs (128-4096 clients)."""
+from dataclasses import dataclass, replace
 
 from repro.common.config import FedConfig
 
@@ -15,3 +16,21 @@ class MnistConfig:
 
 CONFIG = MnistConfig()
 FED = FedConfig()
+
+
+def fleet_fed(num_clients: int = 12, **overrides) -> FedConfig:
+    """A ``FedConfig`` scaled to an arbitrary fleet size.
+
+    The paper's hyper-parameters (Table I trust constants, B=20, E=5,
+    timeout) stay fixed; the starved/poisoner counts scale with the fleet by
+    the paper's 2-of-12 fractions (see ``resources.make_fleet``).  Pass any
+    ``FedConfig`` field as an override, e.g.::
+
+        fleet_fed(512, aggregation="async", foolsgold=False)
+    """
+    return replace(FED, num_clients=num_clients, **overrides)
+
+
+def small_model(hidden: int = 32) -> MnistConfig:
+    """A reduced client model for large-fleet benchmarks and smoke tests."""
+    return replace(CONFIG, hidden=hidden)

@@ -3,16 +3,21 @@
 Operates on stacked flat client updates (N, D) — the simulation scale.  The
 mesh-scale equivalent lives in ``core/distributed.py`` (pytree + collectives)
 and the Pallas kernel ``kernels/fedavg_agg`` implements the same weighted
-reduction as a tiled TPU kernel.
+reduction as a tiled TPU kernel; ``fedavg_aggregate`` routes through it on
+accelerators (``impl="auto"``) and falls back to an einsum on CPU.
 
 Modes:
-  fedavg  -- synchronous FedAvg [24]: wait for everyone (stragglers included);
-             round time = max(latency).
-  fedar   -- the paper: aggregate arrivals within timeout t, skip stragglers;
-             round time = t.
-  async   -- FedAsync-style: fold updates one-by-one in arrival order with
-             staleness-decayed mixing weight; round time = t (server never
-             blocks).
+  fedavg    -- synchronous FedAvg [24]: wait for everyone (stragglers
+               included); round time = max(latency).
+  fedar     -- the paper: aggregate arrivals within timeout t, skip
+               stragglers; round time = t.
+  async     -- buffered no-wait (FedBuff-style): straggler updates land in a
+               fixed-size per-client buffer and merge in a later round with a
+               staleness-discounted weight; round time = t (server never
+               blocks).  The buffer logic lives in ``core/engine.py``; the
+               staleness-decayed weighted reduction is here / in the kernel.
+  async_seq -- legacy FedAsync-style: fold updates one-by-one in arrival
+               order with staleness-decayed mixing weight (O(N) sequential).
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FedConfig
+from repro.kernels.fedavg_agg import fedavg_agg
 
 
 def deviation_mask(deltas: jnp.ndarray, active: jnp.ndarray, gamma: float):
@@ -35,12 +41,32 @@ def deviation_mask(deltas: jnp.ndarray, active: jnp.ndarray, gamma: float):
     return active & (dist > mu + gamma * sd)
 
 
-def fedavg_aggregate(global_flat, deltas, weights, mask):
-    """w <- w + sum_m mask_m * weight_m * delta_m / sum(mask * weight)."""
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "einsum"
+    return impl
+
+
+def fedavg_aggregate(
+    global_flat, deltas, weights, mask, *, staleness=None, impl: str = "einsum"
+):
+    """w <- w + sum_m mask_m * weight_m * s(tau_m) * delta_m / sum(...).
+
+    ``staleness``: optional (N,) rounds-late per update, poly-decayed as
+    ``(1 + tau)^-0.5`` (the buffered-async discount).  ``impl`` picks the
+    reduction backend: "einsum" (XLA), "kernel" (Pallas ``fedavg_agg``,
+    interpreted off-TPU), or "auto" (kernel on TPU, einsum elsewhere)."""
     w = weights * mask.astype(weights.dtype)
-    denom = jnp.maximum(jnp.sum(w), 1e-9)
-    upd = jnp.einsum("n,nd->d", w, deltas) / denom
-    return global_flat + upd
+    decay = 1.0 if staleness is None else staleness_weight(staleness)
+    denom = jnp.maximum(jnp.sum(w * decay), 1e-9)
+    if _resolve_impl(impl) == "kernel":
+        num = fedavg_agg(
+            deltas, w, staleness=staleness,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        num = jnp.einsum("n,nd->d", w * decay, deltas)
+    return global_flat + num / denom
 
 
 def async_aggregate(global_flat, models, weights, mask, order, fed: FedConfig):
@@ -58,8 +84,8 @@ def async_aggregate(global_flat, models, weights, mask, order, fed: FedConfig):
     return g
 
 
-def staleness_weight(staleness, fed: FedConfig):
+def staleness_weight(staleness, fed: FedConfig | None = None):
     """FedAsync poly decay: s(tau) = (1 + tau)^-0.5."""
-    if fed.staleness_decay == "const":
+    if fed is not None and fed.staleness_decay == "const":
         return jnp.ones_like(staleness)
     return (1.0 + staleness) ** -0.5

@@ -25,8 +25,6 @@ trust-weighted deltas.  The paper-faithful small-scale semantics live in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

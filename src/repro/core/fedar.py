@@ -1,52 +1,28 @@
 """FedAR end-to-end simulation — Algorithm 2, paper-faithful.
 
-Simulates the 12-robot fleet of §IV: heterogeneous resources, stragglers
+Simulates the robot fleet of §IV: heterogeneous resources, stragglers
 (latency > timeout), poisoners (label-flipped local data), trust evolution,
-and the three aggregation modes.  The per-round computation is one jitted
-function; the round loop is a thin python driver that records histories for
-the paper's figures.
+and the aggregation modes.  All round math lives in
+:mod:`repro.core.engine` — ``FedARServer`` is a thin host-side wrapper that
+keeps the seed's public API (``run_round`` / ``run`` + a ``history`` dict of
+per-round rows) while delegating to the fully-jitted engine.  ``run`` executes
+every round inside one ``lax.scan`` by default (``driver="scan"``);
+``driver="python"`` keeps the one-jitted-dispatch-per-round loop.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig
-from repro.core import aggregation as agg
-from repro.core import foolsgold as fg
-from repro.core.resources import (
-    ResourceState,
-    TaskRequirement,
-    check_resource,
-    drain_battery,
-    make_fleet,
-    round_latency,
-)
-from repro.core.selection import select_clients
-from repro.core.trust import TrustState, init_trust, update_trust
-from repro.models.mnist import init_mnist, local_sgd, mnist_accuracy, mnist_loss
+from repro.core.engine import FedAREngine, RoundOutputs, flatten, unflatten
+from repro.core.resources import TaskRequirement
 
-
-def flatten(params) -> jnp.ndarray:
-    leaves = jax.tree.leaves(params)
-    return jnp.concatenate([l.reshape(-1) for l in leaves])
-
-
-def unflatten(flat, template):
-    leaves, treedef = jax.tree.flatten(template)
-    out, off = [], 0
-    for l in leaves:
-        n = int(np.prod(l.shape))
-        out.append(flat[off : off + n].reshape(l.shape))
-        off += n
-    return jax.tree.unflatten(treedef, out)
+__all__ = ["FedARServer", "flatten", "unflatten"]
 
 
 @dataclass
@@ -59,16 +35,11 @@ class FedARServer:
     lr: float = 0.1
 
     def __post_init__(self):
-        key = jax.random.PRNGKey(self.fed.seed)
-        self.params = init_mnist(key, self.cfg)
-        self.template = self.params
-        self.dim = flatten(self.params).shape[0]
-        self.trust = init_trust(self.fed.num_clients, self.fed)
-        self.resources, self.poison_mask = make_fleet(
-            self.fed.num_clients, seed=self.fed.seed
-        )
-        self.fg_history = jnp.zeros((self.fed.num_clients, self.dim))
-        self.round_idx = 0
+        self.engine = FedAREngine(self.cfg, self.fed, self.req, lr=self.lr)
+        self.template = self.engine.template
+        self.dim = self.engine.dim
+        self.poison_mask = self.engine.poison_mask
+        self.state = self.engine.init_state()
         self.history: Dict[str, List[Any]] = {
             "trust": [],
             "selected": [],
@@ -78,104 +49,75 @@ class FedARServer:
             "round_time": [],
         }
 
+    # -- live views of the engine carry (the seed exposed these directly) --
+    @property
+    def params(self):
+        return unflatten(self.state.params, self.template)
+
+    @property
+    def trust(self):
+        return self.state.trust
+
+    @property
+    def resources(self):
+        return self.state.resources
+
+    @property
+    def fg_history(self):
+        return self.state.fg_history
+
+    @property
+    def round_idx(self) -> int:
+        return int(self.state.round_idx)
+
+    # ------------------------------------------------------------------
+    def _append(self, out: RoundOutputs, rounds: int, with_eval: bool):
+        """Host bookkeeping: fold stacked (or single-round) outputs into the
+        seed-format history dict."""
+        trust = np.atleast_2d(np.asarray(out.trust))
+        selected = np.atleast_2d(np.asarray(out.selected))
+        on_time = np.atleast_2d(np.asarray(out.on_time))
+        round_time = np.reshape(np.asarray(out.round_time), (rounds,))
+        loss = np.reshape(np.asarray(out.loss), (rounds,))
+        acc = np.reshape(np.asarray(out.acc), (rounds,))
+        for r in range(rounds):
+            self.history["trust"].append(trust[r])
+            self.history["selected"].append(selected[r])
+            self.history["on_time"].append(on_time[r])
+            self.history["round_time"].append(float(round_time[r]))
+            if with_eval:
+                self.history["loss"].append(float(loss[r]))
+                self.history["acc"].append(float(acc[r]))
+
     # ------------------------------------------------------------------
     def run_round(self, data, *, eval_set=None, force_straggler=None):
-        """One communication round.  ``data``: dict with stacked per-client
-        arrays x (N, n, 784), y (N, n), sizes (N,), activations (N,) int32
-        (0=relu, 1=softmax per Table II)."""
-        fed, cfg = self.fed, self.cfg
-        key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), self.round_idx)
-        k_sel, k_lat, k_poi = jax.random.split(key, 3)
-
-        selected, ok = select_clients(
-            k_sel, self.trust, self.resources, self.req, fed
+        """One communication round (one jitted dispatch + host sync).
+        ``data``: dict with stacked per-client arrays x (N, n, 784), y (N, n),
+        sizes (N,), activations (N,) int32 (0=relu, 1=softmax, Table II)."""
+        force = None if force_straggler is None else jnp.asarray(force_straggler)
+        self.state, out = self.engine.step(
+            self.state, data, eval_set=eval_set, force_straggler=force
         )
+        self._append(out, 1, eval_set is not None)
+        return np.asarray(out.selected), np.asarray(out.on_time)
 
-        # --- local training on every client (masked later); vmap over fleet
-        def client_update(p_flat, x, y, act):
-            p = unflatten(p_flat, self.template)
-            new = local_sgd(
-                p,
-                x,
-                y,
-                lr=self.lr,
-                batch_size=fed.local_batch_size,
-                epochs=fed.local_epochs,
-                activation=act,
-            )
-            return flatten(new)
+    def run(self, data, rounds: int, eval_set=None, force_straggler=None,
+            driver: str = "scan"):
+        """Run ``rounds`` communication rounds.
 
-        g_flat = flatten(self.params)
-        locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
-            g_flat, data["x"], data["y"], data["activations"]
+        driver="scan"   -- all rounds inside one ``lax.scan`` (no per-round
+                           host sync; the default).
+        driver="python" -- per-round jitted dispatch via ``run_round``."""
+        if driver == "python":
+            for _ in range(rounds):
+                self.run_round(
+                    data, eval_set=eval_set, force_straggler=force_straggler
+                )
+            return self.history
+        force = None if force_straggler is None else jnp.asarray(force_straggler)
+        self.state, outs = self.engine.run(
+            self.state, data, rounds=rounds, eval_set=eval_set,
+            force_straggler=force,
         )
-        deltas = locals_flat - g_flat[None, :]
-
-        # --- virtual time: latency per client, straggler = late vs timeout
-        model_bytes = self.dim * 4.0
-        train_flops = float(
-            2 * fed.local_epochs * data["x"].shape[1] * cfg.input_dim * cfg.hidden
-        )
-        lat = round_latency(
-            self.resources, train_flops=train_flops, model_bytes=model_bytes, key=k_lat
-        )
-        if force_straggler is not None:
-            lat = jnp.where(jnp.asarray(force_straggler), fed.timeout * 3.0, lat)
-        on_time = lat <= fed.timeout
-
-        # --- deviation ban + foolsgold weights
-        active = selected & on_time
-        deviated = agg.deviation_mask(deltas, active, fed.deviation_gamma)
-        contributing = active & ~deviated
-        weights = data["sizes"].astype(jnp.float32)
-        if fed.foolsgold:
-            self.fg_history = fg.update_history(self.fg_history, deltas, contributing)
-            fgw = fg.foolsgold_weights(self.fg_history, contributing)
-            weights = weights * fgw
-
-        # --- aggregate
-        if fed.aggregation == "fedavg":
-            # synchronous: waits for everyone selected (incl. stragglers)
-            sync_active = selected & ~deviated
-            g_new = agg.fedavg_aggregate(g_flat, deltas, weights, sync_active)
-            round_time = jnp.max(jnp.where(selected, lat, 0.0))
-        elif fed.aggregation == "async":
-            order = jnp.argsort(jnp.where(contributing, lat, jnp.inf))
-            g_new = agg.async_aggregate(
-                g_flat, locals_flat, weights, contributing, order, fed
-            )
-            round_time = jnp.full((), fed.timeout)
-        else:  # fedar (timeout skip)
-            g_new = agg.fedavg_aggregate(g_flat, deltas, weights, contributing)
-            round_time = jnp.full((), fed.timeout)
-
-        self.params = unflatten(g_new, self.template)
-
-        # --- trust + battery updates
-        self.trust = update_trust(
-            self.trust,
-            fed,
-            selected=selected,
-            on_time=on_time,
-            deviated=deviated,
-            interested=ok,
-        )
-        self.resources = drain_battery(self.resources, selected)
-        self.round_idx += 1
-
-        # --- bookkeeping
-        self.history["trust"].append(np.asarray(self.trust.score))
-        self.history["selected"].append(np.asarray(selected))
-        self.history["on_time"].append(np.asarray(on_time))
-        self.history["round_time"].append(float(round_time))
-        if eval_set is not None:
-            loss = float(mnist_loss(self.params, eval_set[0], eval_set[1]))
-            acc = float(mnist_accuracy(self.params, eval_set[0], eval_set[1]))
-            self.history["loss"].append(loss)
-            self.history["acc"].append(acc)
-        return selected, on_time
-
-    def run(self, data, rounds: int, eval_set=None, force_straggler=None):
-        for _ in range(rounds):
-            self.run_round(data, eval_set=eval_set, force_straggler=force_straggler)
+        self._append(outs, rounds, eval_set is not None)
         return self.history

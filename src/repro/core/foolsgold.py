@@ -7,7 +7,6 @@ historical aggregate updates, pardoning, then logit re-scaling.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -18,8 +18,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import FedConfig
-
 
 class ResourceState(NamedTuple):
     memory: jnp.ndarray  # (N,) MB available
@@ -34,18 +32,34 @@ class TaskRequirement(NamedTuple):
     battery: float = 0.15
 
 
+STARVED_FRAC = 1.0 / 6.0  # paper §IV.A: 2 of 12 robots are resource-starved
+POISON_FRAC = 1.0 / 6.0  # ... and 2 of 12 are unreliable/poisoning
+
+
 def make_fleet(
     num_clients: int,
     *,
-    num_starved: int = 2,
-    num_poisoners: int = 2,
+    num_starved: int | None = None,
+    num_poisoners: int | None = None,
+    starved_frac: float = STARVED_FRAC,
+    poison_frac: float = POISON_FRAC,
     seed: int = 0,
 ) -> tuple[ResourceState, np.ndarray]:
-    """Heterogeneous fleet per §IV.A.  Returns (resources, poisoner mask).
+    """Heterogeneous fleet per §IV.A, at any fleet size.  Returns
+    (resources, poisoner mask).
 
     The last ``num_poisoners`` clients send corrupted models; the
-    ``num_starved`` before them have scarce memory/battery/bandwidth.
+    ``num_starved`` before them have scarce memory/battery/bandwidth.  When a
+    count is ``None`` it scales with the fleet by the paper's 2-of-12 fraction
+    (so ``make_fleet(12)`` reproduces the paper exactly and
+    ``make_fleet(512)`` keeps the same heterogeneity mix).
     """
+    if num_starved is None:
+        num_starved = int(round(num_clients * starved_frac))
+    if num_poisoners is None:
+        num_poisoners = int(round(num_clients * poison_frac))
+    if num_starved + num_poisoners > num_clients:
+        raise ValueError("starved + poisoners exceed fleet size")
     rng = np.random.default_rng(seed)
     memory = rng.uniform(128, 1024, num_clients)
     bandwidth = rng.uniform(1.0, 8.0, num_clients)

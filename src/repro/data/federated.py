@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.resources import POISON_FRAC
 from repro.data.synthetic import make_digits
 
 # Table II: (labels, activation, n_samples); softmax=1, relu=0
@@ -31,17 +32,14 @@ TABLE_II = [
 ]
 
 
-def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
-                 samples_per_client: int | None = None):
-    """Stacked fleet data.  Arrays are padded to the max sample count with
-    wrap-around so vmap over clients is rectangular; ``sizes`` holds n_u.
-
-    ``poisoners``: 0-indexed robots whose labels are flipped (the paper uses
-    two poisoning robots).  ``samples_per_client`` overrides Table II counts
-    (useful to shrink tests)."""
+def _build_fleet(profiles, poisoners, *, flip_frac: float, seed: int,
+                 samples_per_client: int | None):
+    """Stack per-client digit shards for a list of (labels, act, n) profiles.
+    Arrays are padded to the max sample count with wrap-around so vmap over
+    clients is rectangular; ``sizes`` holds n_u."""
     xs, ys, sizes, acts = [], [], [], []
     n_max = 0
-    for i, (labels, act, n) in enumerate(TABLE_II):
+    for i, (labels, act, n) in enumerate(profiles):
         if samples_per_client:
             n = min(n, samples_per_client)
         flip = flip_frac if i in poisoners else 0.0
@@ -64,6 +62,36 @@ def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
         "sizes": np.asarray(sizes, np.float32),
         "activations": np.asarray(acts, np.int32),
     }
+
+
+def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
+                 samples_per_client: int | None = None):
+    """The paper's exact 12-robot fleet (Table II).
+
+    ``poisoners``: 0-indexed robots whose labels are flipped (the paper uses
+    two poisoning robots).  ``samples_per_client`` overrides Table II counts
+    (useful to shrink tests)."""
+    return _build_fleet(TABLE_II, set(poisoners), flip_frac=flip_frac,
+                        seed=seed, samples_per_client=samples_per_client)
+
+
+def scaled_fleet(num_clients: int, *, seed: int = 0,
+                 num_poisoners: int | None = None,
+                 poison_frac: float = POISON_FRAC, flip_frac: float = 0.6,
+                 samples_per_client: int | None = 200):
+    """Table II tiled out to ``num_clients`` robots for engine-scale runs.
+
+    Client ``i`` inherits profile ``TABLE_II[i % 12]`` (label subset,
+    activation, sample count); the LAST ``num_poisoners`` clients label-flip,
+    matching the poisoner positions of ``resources.make_fleet`` so the data
+    poisoners are also the resource-model poisoners.  ``num_poisoners=None``
+    scales the paper's 2-of-12 fraction."""
+    if num_poisoners is None:
+        num_poisoners = int(round(num_clients * poison_frac))
+    profiles = [TABLE_II[i % len(TABLE_II)] for i in range(num_clients)]
+    poisoners = set(range(num_clients - num_poisoners, num_clients))
+    return _build_fleet(profiles, poisoners, flip_frac=flip_frac, seed=seed,
+                        samples_per_client=samples_per_client)
 
 
 def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 0):

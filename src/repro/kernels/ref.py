@@ -5,12 +5,13 @@ import jax
 import jax.numpy as jnp
 
 
-def fedavg_agg_ref(deltas, weights):
-    """Trust-weighted server aggregation.
+def fedavg_agg_ref(deltas, weights, staleness=None):
+    """Trust-weighted (optionally staleness-decayed) server aggregation.
     deltas: (N, D); weights: (N,) -> (D,) float32."""
-    return jnp.einsum(
-        "n,nd->d", weights.astype(jnp.float32), deltas.astype(jnp.float32)
-    )
+    w = weights.astype(jnp.float32)
+    if staleness is not None:
+        w = w * (1.0 + staleness.astype(jnp.float32)) ** -0.5
+    return jnp.einsum("n,nd->d", w, deltas.astype(jnp.float32))
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -29,7 +29,6 @@ import numpy as np
 from repro.common.config import INPUT_SHAPES, FedConfig, TrainConfig
 from repro.configs import ARCH_IDS, cfg_for_shape, get_config
 from repro.core.distributed import (
-    CohortState,
     TrainState,
     build_fedar_train_step,
     init_cohorts,
@@ -407,8 +406,9 @@ def main(argv=None):
                 if sink:
                     sink.write(line + "\n")
                     sink.flush()
-                print(f"[{status}] {arch} x {shape} multi_pod={mp}"
-                      + (f" compile={rec.get('compile_s')}s" if status == "OK" else f" {rec.get('error','')[:200]}"))
+                tail = (f" compile={rec.get('compile_s')}s" if status == "OK"
+                        else f" {rec.get('error', '')[:200]}")
+                print(f"[{status}] {arch} x {shape} multi_pod={mp}" + tail)
     if sink:
         sink.close()
     sys.exit(0 if ok else 1)

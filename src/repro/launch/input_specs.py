@@ -7,8 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import INPUT_SHAPES, InputShape, ModelConfig
-from repro.models.model import VISION_STUB_DIM, Model, decode_cache_len
+from repro.common.config import InputShape, ModelConfig
+from repro.models.model import VISION_STUB_DIM, Model
 
 
 def sds(shape, dtype):

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.config import FedConfig, TrainConfig
 from repro.configs import ARCH_IDS, get_config

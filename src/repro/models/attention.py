@@ -12,8 +12,6 @@ path below is the lowering used for CPU dry-runs and is numerically identical
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

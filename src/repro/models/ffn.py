@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
-from repro.common.config import ModelConfig
 from repro.models.layers import activation, dense_init
 
 

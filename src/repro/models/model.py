@@ -13,7 +13,7 @@ mesh on the CPU host.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +32,8 @@ def layer_windows(cfg: ModelConfig) -> np.ndarray:
     if cfg.global_every:
         return np.array(
             [
-                cfg.local_window if (l + 1) % cfg.global_every else cfg.sliding_window
-                for l in range(L)
+                cfg.local_window if (i + 1) % cfg.global_every else cfg.sliding_window
+                for i in range(L)
             ],
             np.int32,
         )
@@ -405,4 +405,4 @@ class Model:
 
 
 def param_count(params) -> int:
-    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(params))

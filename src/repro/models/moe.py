@@ -82,7 +82,9 @@ def _route_indices(probs, k: int, capacity: int):
         gates.append(gate * keep)
         fill = fill + jnp.sum(onehot * keep[..., None].astype(jnp.int32), axis=1)
         remaining = remaining * (1.0 - onehot.astype(probs.dtype))
-    stack = lambda xs: jnp.stack(xs, axis=-1)  # (G, n, k)
+    def stack(xs):
+        return jnp.stack(xs, axis=-1)  # (G, n, k)
+
     return stack(idxs), stack(poss), stack(gates)
 
 
@@ -133,7 +135,6 @@ def moe_forward(params, x, cfg: ModelConfig):
         eo_g = eo.transpose(1, 0, 2, 3)  # (G, E, C, d)
 
         def gather_group(eog, idxg, posg, gateg):
-            out = jnp.zeros((eog.shape[-1],), x.dtype)
             outs = 0.0
             for j in range(k):
                 outs = outs + gateg[:, j, None] * eog[idxg[:, j], posg[:, j]]

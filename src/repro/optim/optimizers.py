@@ -7,7 +7,6 @@ apply verbatim (ZeRO-1-style placement comes for free).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -23,7 +22,7 @@ class Optimizer(NamedTuple):
 
 def _global_norm(tree):
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in jax.tree.leaves(tree))
     )
 
 
@@ -37,7 +36,9 @@ def _clip(grads, max_norm):
 
 def make_optimizer(tc: TrainConfig, schedule=None) -> Optimizer:
     if schedule is None:
-        schedule = lambda step: tc.lr
+
+        def schedule(step):
+            return tc.lr
 
     if tc.optimizer == "sgd":
 

@@ -1,7 +1,5 @@
 """Per-architecture smoke tests: reduced variant of each assigned family runs
 one forward + one train step on CPU; asserts output shapes and no NaNs."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -82,7 +80,7 @@ def test_loss_decreases_tinyllama():
     loss_fn = jax.jit(jax.value_and_grad(lambda p: model.loss(p, batch)[0]))
     l0, _ = loss_fn(params)
     for _ in range(10):
-        l, g = loss_fn(params)
+        lt, g = loss_fn(params)
         params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
     l1, _ = loss_fn(params)
     assert float(l1) < float(l0) * 0.9

@@ -2,15 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.common.config import FedConfig
 from repro.core import aggregation as agg
 from repro.core.foolsgold import foolsgold_weights, update_history
 from repro.core.resources import (
-    ResourceState,
     TaskRequirement,
     check_resource,
     drain_battery,

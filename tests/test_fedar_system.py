@@ -7,10 +7,8 @@ These are the repro-validation tests backing EXPERIMENTS.md:
     synchronous waiting in virtual time (Fig 8)
   * resource-starved clients never enter the participant set
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.fedavg_agg import fedavg_agg
@@ -44,6 +43,71 @@ def test_fedavg_agg_zero_weights():
     deltas = jnp.ones((4, 100))
     got = fedavg_agg(deltas, jnp.zeros(4), interpret=True)
     assert np.allclose(got, 0.0)
+
+
+def test_fedavg_agg_padded_tail():
+    """D not a multiple of block_d: the zero-padded tail must not leak."""
+    N, D, block = 7, 1000, 256  # 1000 = 3*256 + 232
+    k = jax.random.PRNGKey(0)
+    deltas = jax.random.normal(k, (N, D))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (N,))
+    got = fedavg_agg(deltas, w, interpret=True, block_d=block)
+    assert got.shape == (D,)
+    np.testing.assert_allclose(got, ref.fedavg_agg_ref(deltas, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_single_client():
+    """N=1 degenerates to a scaled copy of the one delta row."""
+    k = jax.random.PRNGKey(2)
+    deltas = jax.random.normal(k, (1, 300))
+    got = fedavg_agg(deltas, jnp.array([2.5]), interpret=True, block_d=128)
+    np.testing.assert_allclose(got, 2.5 * deltas[0], rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_bf16_vs_fp32_oracle():
+    """bf16 deltas accumulate in fp32 inside the kernel."""
+    k = jax.random.PRNGKey(3)
+    deltas32 = jax.random.normal(k, (24, 900))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (24,))
+    got = fedavg_agg(deltas32.astype(jnp.bfloat16), w, interpret=True,
+                     block_d=256)
+    assert got.dtype == jnp.float32
+    want = ref.fedavg_agg_ref(deltas32.astype(jnp.bfloat16), w)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_fedavg_agg_large_fleet_shrinks_block():
+    """At N=4096 the tile must narrow to keep the VMEM slab bounded, and the
+    result must still match the oracle."""
+    from repro.kernels.fedavg_agg import VMEM_BUDGET_BYTES, _fit_block
+
+    assert _fit_block(4096, 2048) * 4096 * 4 <= VMEM_BUDGET_BYTES
+    assert _fit_block(12, 2048) == 2048  # small fleets keep the wide tile
+    k = jax.random.PRNGKey(7)
+    deltas = jax.random.normal(k, (4096, 300))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (4096,))
+    got = fedavg_agg(deltas, w, interpret=True)
+    np.testing.assert_allclose(got, ref.fedavg_agg_ref(deltas, w),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("N,D,block", [(5, 97, 64), (16, 2048, 2048)])
+def test_fedavg_agg_staleness_decay(N, D, block):
+    """The fused (1 + tau)^-0.5 staleness discount matches the oracle."""
+    k = jax.random.PRNGKey(N + D)
+    deltas = jax.random.normal(k, (N, D))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (N,))
+    tau = jax.random.randint(jax.random.fold_in(k, 2), (N,), 0, 5)
+    tau = tau.astype(jnp.float32)
+    got = fedavg_agg(deltas, w, staleness=tau, interpret=True, block_d=block)
+    want = ref.fedavg_agg_ref(deltas, w, staleness=tau)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # tau=0 must equal the undecayed path
+    got0 = fedavg_agg(deltas, w, staleness=jnp.zeros(N), interpret=True,
+                      block_d=block)
+    np.testing.assert_allclose(got0, ref.fedavg_agg_ref(deltas, w),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

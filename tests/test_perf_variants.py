@@ -3,9 +3,7 @@ identical to the baselines they replace."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -79,7 +77,6 @@ def test_unrolled_trunk_matches_scan():
 
 
 def test_tp_only_policy_replicates_data_axis():
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
     cfg = get_config("yi-9b")
     model = Model(cfg)
     params = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))

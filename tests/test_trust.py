@@ -1,9 +1,7 @@
 """Trust engine unit + property tests (Table I / Algorithm 1)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.common.config import FedConfig
 from repro.core.trust import TrustState, eligible, init_trust, update_trust
