@@ -1,17 +1,25 @@
-"""Engine throughput: python-loop driver vs fully-jitted scan engine.
+"""Engine throughput: python-loop driver vs fully-jitted scan engine, plus
+rounds/sec scaling of the mesh-sharded engine over fake host devices.
 
 Measures communication rounds/sec at fleet sizes N in {12, 128, 512, 2048}
 for (a) the seed-style python loop — one eager dispatch per round with host
 round-trips for the history rows — and (b) the ``lax.scan`` engine, which
-compiles once and keeps all R rounds on-device.
+compiles once and keeps all R rounds on-device.  The ``--devices`` dimension
+re-runs the scan engine with ``FedConfig.mesh_shape=k`` for each requested
+device count: every count spawns a worker process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=k`` (the flag must land
+before jax initializes), so one invocation records the 1-vs-k scaling curve.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
-Emits ``BENCH_engine.json`` (rounds/sec per fleet size) for the perf
-trajectory; also wired into ``benchmarks.run``.
+                                                       [--devices 1,8]
+Emits ``BENCH_engine.json`` (rounds/sec per fleet size + per device count)
+for the perf trajectory; also wired into ``benchmarks.run``.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -25,11 +33,15 @@ from repro.data.federated import scaled_fleet
 
 FLEET_SIZES = (12, 128, 512, 2048)
 QUICK_SIZES = (12, 128)
+SHARDED_SIZES = (128, 512)
+QUICK_SHARDED_SIZES = (128,)
+DEVICE_COUNTS = (1, 8)
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 
 
-def _make(n: int):
-    fed = fleet_fed(n, local_epochs=1, local_batch_size=20, foolsgold=False)
+def _make(n: int, *, mesh_shape: int | None = None):
+    fed = fleet_fed(n, local_epochs=1, local_batch_size=20, foolsgold=False,
+                    mesh_shape=mesh_shape)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
     data = {
         k: jnp.asarray(v)
@@ -80,15 +92,71 @@ def bench(quick: bool = False):
     return rows, summary
 
 
-def write_json(summary, path: str = "BENCH_engine.json") -> None:
+def bench_sharded_worker(device_count: int, quick: bool) -> dict:
+    """In-process sharded measurement; assumes the host already exposes
+    ``device_count`` devices (the parent sets XLA_FLAGS before spawning)."""
+    out = {}
+    mesh = device_count if device_count > 1 else None
+    for n in QUICK_SHARDED_SIZES if quick else SHARDED_SIZES:
+        engine, data = _make(n, mesh_shape=mesh)
+        out[str(n)] = 1.0 / _time_scan(engine, data, rounds=8)
+    return out
+
+
+def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
+    """rounds/sec of the scan engine per host device count: one worker
+    process per count so the XLA device flag precedes jax init."""
+    result = {}
+    for k in counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={k}"
+        ).strip()
+        cmd = [sys.executable, "-m", "benchmarks.engine_bench",
+               "--worker", str(k)]
+        if quick:
+            cmd.append("--quick")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"devices={k} worker failed "
+                f"(exit {proc.returncode}):\n{proc.stderr.strip()[-2000:]}"
+            )
+        result[str(k)] = json.loads(proc.stdout.strip().splitlines()[-1])
+    return result
+
+
+def write_json(summary, devices=None, path: str = "BENCH_engine.json") -> None:
+    payload = {"rounds_per_sec": summary}
+    if devices is not None:
+        payload["sharded_rounds_per_sec_by_devices"] = devices
     with open(path, "w") as f:
-        json.dump({"rounds_per_sec": summary}, f, indent=2)
+        json.dump(payload, f, indent=2)
+
+
+def _parse_counts(argv) -> tuple:
+    if "--devices" in argv:
+        raw = argv[argv.index("--devices") + 1]
+        return tuple(int(c) for c in raw.split(","))
+    return DEVICE_COUNTS
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    if "--worker" in argv:  # child: measure one device count, emit JSON
+        k = int(argv[argv.index("--worker") + 1])
+        assert len(jax.devices()) >= k or k == 1, "worker missing devices"
+        print(json.dumps(bench_sharded_worker(k, quick)))
+        return
     rows, summary = bench(quick=quick)
-    write_json(summary)
+    devices = bench_devices(quick=quick, counts=_parse_counts(argv))
+    write_json(summary, devices)
+    for k, per_n in devices.items():
+        for n, rps in per_n.items():
+            rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / rps, 1),
+                         round(rps, 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")

@@ -22,7 +22,9 @@ def main() -> None:
         rows += fedar_figs.selection_ablation()
         rows += fedar_figs.poisoning_defense()
     engine_rows, engine_summary = engine_bench.bench(quick=quick)
-    engine_bench.write_json(engine_summary)  # BENCH_engine.json perf trail
+    # mesh-sharded scaling runs in worker processes (device flag precedes jax)
+    engine_devices = engine_bench.bench_devices(quick=quick)
+    engine_bench.write_json(engine_summary, engine_devices)  # BENCH_engine.json
     rows += engine_rows
     rows += kernels_bench.bench()
     rows += roofline.rows()

@@ -3,35 +3,56 @@
 All rounds execute inside one jitted ``lax.scan`` (see
 ``repro/core/engine.py``); pass ``--clients N`` to scale the fleet past the
 paper's 12 robots (Table II profiles are tiled, stragglers/poisoners keep the
-paper's 1/6 fractions).
+paper's 1/6 fractions).  ``--devices k`` shards the engine's round loop over
+k client shards (``shard_map`` over a ``clients`` mesh); on a CPU-only host
+it forces k fake host devices via XLA_FLAGS, which is why jax is imported
+only after argument parsing.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--clients 128]
+      PYTHONPATH=src python examples/quickstart.py --clients 128 --devices 8
 """
 import argparse
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.fedar_mnist import MnistConfig, fleet_fed
-from repro.core.fedar import FedARServer
-from repro.core.resources import TaskRequirement
-from repro.data.federated import scaled_fleet, table2_fleet
-from repro.data.synthetic import make_digits
+import os
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=12)
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="client shards; >1 runs the mesh-sharded engine")
     args = ap.parse_args()
+
+    if args.devices > 1:
+        if args.clients % args.devices:
+            ap.error(f"--clients {args.clients} must divide by "
+                     f"--devices {args.devices}")
+        # must land before jax initializes its backends
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.fedar_mnist import MnistConfig, fleet_fed
+    from repro.core.fedar import FedARServer
+    from repro.core.resources import TaskRequirement
+    from repro.data.federated import scaled_fleet, table2_fleet
+    from repro.data.synthetic import make_digits
 
     # the paper's B=20, E=5 setting, at any fleet size.  FoolsGold assumes
     # honest clients send DIVERSE updates; the tiled scaled fleet has many
     # clients per Table II profile, so the similarity defense would crush
     # honest weights -> keep it for the paper's 12 heterogeneous robots only
     fed = fleet_fed(args.clients, local_epochs=5, local_batch_size=20,
-                    timeout=10.0, foolsgold=args.clients == 12)
+                    timeout=10.0, foolsgold=args.clients == 12,
+                    mesh_shape=args.devices if args.devices > 1 else None)
     server = FedARServer(MnistConfig(), fed, TaskRequirement())
+    if server.mesh is not None:
+        print(f"mesh: {server.mesh.devices.size} client shards "
+              f"x {args.clients // server.mesh.devices.size} clients")
 
     if args.clients == 12:
         data = table2_fleet(samples_per_client=300)  # Table II fleet

@@ -199,6 +199,15 @@ class FedConfig:
     staleness_alpha: float = 0.6  # FedAsync mixing weight
     staleness_decay: str = "poly"  # poly | const
     foolsgold: bool = True
+    # --- client-mesh sharding (core/distributed.py + core/engine.py) ---
+    # mesh_shape: devices along the client axis of the engine's shard_map.
+    # None or 1 keeps the single-device path (exact seed numerics); k > 1
+    # shards every client-indexed (N, ...) tensor into N/k blocks and turns
+    # aggregation into a trust*staleness-weighted psum.  num_clients must be
+    # divisible by the shard count.  Falls back to single-device when the
+    # host exposes one device.
+    mesh_shape: Optional[int] = None
+    client_axis: str = "clients"
     seed: int = 0
 
 

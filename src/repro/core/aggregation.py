@@ -1,10 +1,14 @@
 """Server-side aggregation strategies (§III.B.7, Algorithm 2 lines 13-14).
 
-Operates on stacked flat client updates (N, D) — the simulation scale.  The
-mesh-scale equivalent lives in ``core/distributed.py`` (pytree + collectives)
-and the Pallas kernel ``kernels/fedavg_agg`` implements the same weighted
-reduction as a tiled TPU kernel; ``fedavg_aggregate`` routes through it on
-accelerators (``impl="auto"``) and falls back to an einsum on CPU.
+Operates on stacked flat client updates (N, D).  Every reduction is written
+against the ``ClientComms`` collective vocabulary (``core/distributed.py``):
+with the default identity comms this is the single-device simulation math;
+inside the engine's ``shard_map`` the ``(N, D)`` operands are shard-local
+client blocks, masks/weights stay replicated ``(N,)``, and the weighted
+reduction becomes a psum across client shards.  The Pallas kernel
+``kernels/fedavg_agg`` implements the same weighted reduction as a tiled TPU
+kernel; ``fedavg_aggregate`` routes through it on accelerators
+(``impl="auto"``) and falls back to an einsum on CPU.
 
 Modes:
   fedavg    -- synchronous FedAvg [24]: wait for everyone (stragglers
@@ -25,16 +29,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FedConfig
+from repro.core.distributed import ClientComms
 from repro.kernels.fedavg_agg import fedavg_agg
 
+_IDENTITY = ClientComms()
 
-def deviation_mask(deltas: jnp.ndarray, active: jnp.ndarray, gamma: float):
+
+def deviation_mask(
+    deltas: jnp.ndarray,
+    active: jnp.ndarray,
+    gamma: float,
+    *,
+    comms: ClientComms = _IDENTITY,
+):
     """Paper's ban trigger ``G^i - D_m^i > gamma``: robust z-score of each
-    client's update distance from the active-population mean."""
-    w = active.astype(jnp.float32)[:, None]
-    denom = jnp.maximum(jnp.sum(w), 1.0)
-    mean = jnp.sum(deltas * w, axis=0) / denom
-    dist = jnp.linalg.norm(deltas - mean, axis=1)  # (N,)
+    client's update distance from the active-population mean.
+
+    ``deltas`` is shard-local (N_loc, D) under mesh comms; ``active`` is the
+    replicated (N,) mask.  Returns the replicated (N,) deviated mask — the
+    population mean/std come from psums of shard partials and a gather of
+    the per-client distances."""
+    w = comms.local(active).astype(jnp.float32)[:, None]
+    denom = jnp.maximum(comms.psum(jnp.sum(w)), 1.0)
+    mean = comms.psum(jnp.sum(deltas * w, axis=0)) / denom
+    dist = comms.all_gather(jnp.linalg.norm(deltas - mean, axis=1))  # (N,)
     act_dist = jnp.where(active, dist, jnp.nan)
     mu = jnp.nanmean(act_dist)
     sd = jnp.sqrt(jnp.nanmean((act_dist - mu) ** 2) + 1e-12)
@@ -48,32 +66,56 @@ def _resolve_impl(impl: str) -> str:
 
 
 def fedavg_aggregate(
-    global_flat, deltas, weights, mask, *, staleness=None, impl: str = "einsum"
+    global_flat,
+    deltas,
+    weights,
+    mask,
+    *,
+    staleness=None,
+    impl: str = "einsum",
+    comms: ClientComms = _IDENTITY,
 ):
     """w <- w + sum_m mask_m * weight_m * s(tau_m) * delta_m / sum(...).
 
     ``staleness``: optional (N,) rounds-late per update, poly-decayed as
     ``(1 + tau)^-0.5`` (the buffered-async discount).  ``impl`` picks the
     reduction backend: "einsum" (XLA), "kernel" (Pallas ``fedavg_agg``,
-    interpreted off-TPU), or "auto" (kernel on TPU, einsum elsewhere)."""
+    interpreted off-TPU), or "auto" (kernel on TPU, einsum elsewhere).
+
+    Under mesh comms ``deltas`` is the shard-local (N_loc, D) block while
+    ``weights`` / ``mask`` / ``staleness`` stay replicated (N,): the scalar
+    denominator is computed on the full vectors (bit-identical to the
+    single-device path) and only the (D,) numerator is a psum of per-shard
+    partial reductions — the trust*staleness-weighted psum GSPMD schedules
+    like a data-parallel gradient reduction."""
     w = weights * mask.astype(weights.dtype)
     decay = 1.0 if staleness is None else staleness_weight(staleness)
     denom = jnp.maximum(jnp.sum(w * decay), 1e-9)
+    w_loc = comms.local(w)
     if _resolve_impl(impl) == "kernel":
         num = fedavg_agg(
-            deltas, w, staleness=staleness,
+            deltas, w_loc,
+            staleness=None if staleness is None else comms.local(staleness),
             interpret=jax.default_backend() != "tpu",
         )
     else:
-        num = jnp.einsum("n,nd->d", w * decay, deltas)
-    return global_flat + num / denom
+        decay_loc = 1.0 if staleness is None else comms.local(decay)
+        num = jnp.einsum("n,nd->d", w_loc * decay_loc, deltas)
+    return global_flat + comms.psum(num) / denom
 
 
-def async_aggregate(global_flat, models, weights, mask, order, fed: FedConfig):
+def async_aggregate(
+    global_flat, models, weights, mask, order, fed: FedConfig,
+    *, comms: ClientComms = _IDENTITY,
+):
     """Fold client MODELS (not deltas) in arrival order:
         w <- (1 - a_m) w + a_m w_m,  a_m = alpha * weight_m-normalized.
     ``order``: (N,) int32 permutation by arrival time; masked-out entries are
-    skipped (mix weight 0)."""
+    skipped (mix weight 0).  The fold is inherently sequential over the
+    global arrival order, so under mesh comms the shard-local models are
+    all-gathered first — this legacy mode does not scale; use
+    ``aggregation="async"`` for the buffered no-wait reduction."""
+    models = comms.all_gather(models)
     wnorm = weights / jnp.maximum(jnp.max(weights), 1e-9)
 
     def body(g, idx):

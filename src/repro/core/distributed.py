@@ -1,35 +1,45 @@
-"""FedAR as a first-class distributed-training feature (mesh scale).
+"""Mesh layer of the unified FedAR engine (client-sharded collectives).
 
-TPU-native translation of the paper (DESIGN.md §3-4): the mesh's data axis
-indexes *client cohorts*.  Each training step:
+The standalone mesh step builder this module used to be is absorbed into
+``core/engine.py``: there is ONE engine, and this module supplies the pieces
+that make its ``lax.scan`` round loop run sharded over a ``clients`` mesh
+axis.  ``FedAREngine`` wraps its scan body in a ``shard_map`` when
+``FedConfig.mesh_shape > 1``; every client-indexed ``(N, ...)`` tensor —
+stacked local datasets, FoolsGold history, the buffered-async delta buffer —
+splits into ``N / mesh_shape`` blocks, while the ``(N,)`` bookkeeping
+vectors (trust, resources, masks) replicate so selection's global sort and
+Algorithm 1's trust updates stay bit-identical to the single-device engine.
 
-  1. every cohort computes the loss on its own batch shard;
-  2. a per-cohort virtual latency is sampled from the cohort's resource
-     profile; cohorts slower than the timeout are MASKED out of aggregation
-     (straggler skip — the paper's Algorithm 2 line 13);
-  3. cohorts whose loss is a z-score outlier are banned for the round (the
-     deviation gate ``G^i - D^i_m > gamma`` — at scale we gate on the cheap
-     per-cohort loss statistic rather than materializing per-cohort deltas);
-  4. surviving cohorts' gradients combine with weights
-     ``trust_norm * n_c * mask`` — because with one local step the FedAR
-     aggregation  w += sum_m (n_m/n) * delta_m  is EXACTLY a weighted
-     gradient combination, the whole construction stays a dense psum that
-     GSPMD schedules like any data-parallel reduction (masking is free);
-  5. the trust engine (Algorithm 1) updates inside the same XLA program.
+Exports:
 
-For E > 1 true local epochs (cohort divergence) use
-``fedar_local_rounds`` — a shard_map data-parallel implementation where each
-shard carries its own cohort replicas, runs E local SGD epochs, then psums
-trust-weighted deltas.  The paper-faithful small-scale semantics live in
-``core/fedar.py``.
+  ``client_mesh``   -- build the 1-D ``clients`` mesh from ``FedConfig``
+                       (``None`` -> single-device fallback).
+  ``ClientComms``   -- identity collectives: the single-device engine and
+                       the comms-parameterized math in ``core/aggregation``
+                       / ``core/foolsgold`` reduce to the seed numerics.
+  ``MeshComms``     -- the same interface over ``jax.lax`` collectives
+                       inside ``shard_map``: aggregation becomes a
+                       trust*staleness-weighted ``psum`` that GSPMD
+                       schedules like a data-parallel reduction, and
+                       FoolsGold's pairwise similarity becomes a gathered
+                       block product (see ``foolsgold_weights``).
+  ``client_spec`` / ``replicated_spec`` -- the ``PartitionSpec`` vocabulary
+                       the engine threads through its in/out specs.
+
+The LM-workload cohort step (``build_fedar_train_step`` /
+``build_fedar_local_rounds``) remains below: it drives a *model* training
+mesh where the data axis indexes client cohorts — the engine-scale
+simulation path lives in ``core/engine.py``.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import warnings
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.common.config import FedConfig, TrainConfig
@@ -37,6 +47,94 @@ from repro.core.trust import TrustState, init_trust, update_trust
 from repro.models.model import Model
 from repro.optim.optimizers import apply_updates, make_optimizer
 
+
+# ---------------------------------------------------------------------------
+# Client-mesh collectives for the unified engine
+# ---------------------------------------------------------------------------
+
+class ClientComms:
+    """Collective vocabulary of the engine's round math, identity flavour.
+
+    The round step is written once against this interface; on a single
+    device every method is the identity so the math is exactly the seed
+    engine's.  ``MeshComms`` swaps in the real collectives inside
+    ``shard_map``.  Convention: "local" arrays hold this shard's block of
+    clients along axis 0; "global" arrays hold all N clients (replicated).
+    """
+
+    axis: Optional[str] = None
+    shards: int = 1
+
+    def psum(self, x):
+        """Sum a shard-local partial across the client axis."""
+        return x
+
+    def all_gather(self, x):
+        """Concatenate shard-local rows into the full (N, ...) array."""
+        return x
+
+    def local(self, x):
+        """Slice this shard's client block out of a replicated (N, ...)."""
+        return x
+
+
+class MeshComms(ClientComms):
+    """``jax.lax`` collectives over the ``clients`` mesh axis."""
+
+    def __init__(self, axis: str, shards: int):
+        self.axis, self.shards = axis, shards
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+    def all_gather(self, x):
+        return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+    def local(self, x):
+        n_local = x.shape[0] // self.shards
+        start = jax.lax.axis_index(self.axis) * n_local
+        return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=0)
+
+
+def client_mesh(fed: FedConfig) -> Optional[Mesh]:
+    """The 1-D ``clients`` mesh ``FedConfig.mesh_shape`` asks for, or
+    ``None`` for the single-device path (``mesh_shape`` unset / 1, or the
+    host exposes a single device).  A host with fewer (but >1) devices than
+    requested gets a narrower mesh with a warning, so scaling numbers are
+    never silently attributed to shards that don't exist.  ``num_clients``
+    must divide evenly into the shards so every block is rectangular."""
+    want = fed.mesh_shape or 1
+    shards = min(want, len(jax.devices()))
+    if shards <= 1:
+        return None
+    if shards < want:
+        warnings.warn(
+            f"mesh_shape={want} requested but only {shards} devices "
+            f"available; sharding {shards}-way",
+            stacklevel=2,
+        )
+    if fed.num_clients % shards:
+        raise ValueError(
+            f"num_clients={fed.num_clients} not divisible by {shards} "
+            f"client shards (mesh_shape={want}, "
+            f"{len(jax.devices())} devices available)"
+        )
+    return Mesh(np.array(jax.devices()[:shards]), (fed.client_axis,))
+
+
+def client_spec(fed: FedConfig) -> P:
+    """PartitionSpec for client-indexed (N, ...) tensors: shard axis 0."""
+    return P(fed.client_axis)
+
+
+def replicated_spec() -> P:
+    """PartitionSpec for replicated state (params, (N,) bookkeeping)."""
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# LM-workload cohort step (model-parallel mesh; data axis = client cohorts)
+# ---------------------------------------------------------------------------
 
 class CohortState(NamedTuple):
     """Server-visible federated state, carried through the jitted step."""

@@ -33,6 +33,19 @@ Per-round stacked outputs (``RoundOutputs``) carry the histories the paper's
 figures need: post-update trust (Fig 7), the selected / on-time masks
 (Fig 8), virtual round time, and eval loss/accuracy (Fig 6).
 
+Mesh sharding (``FedConfig.mesh_shape > 1``): the whole scan body runs
+inside a ``shard_map`` over a 1-D ``clients`` mesh (``core/distributed``).
+Client-indexed *heavy* tensors — the stacked local datasets, the (N, D)
+FoolsGold history and async delta buffer — shard into N/k client blocks
+(``PartitionSpec(client_axis)``), so vmapped local SGD and the buffered
+merge run data-parallel across devices; aggregation is a trust*staleness-
+weighted ``psum`` of per-shard partial reductions.  The (N,) bookkeeping
+vectors (trust, resources, masks, RNG draws) replicate, so selection's
+global trust sort and Algorithm 1 stay bit-identical to the single-device
+engine; only reduction order differs (fp32 tolerance).  With one device (or
+``mesh_shape`` unset) the identity ``ClientComms`` reproduces the seed
+numerics exactly.
+
 The hot aggregation path goes through the Pallas ``fedavg_agg`` kernel
 (trust-weighted + staleness-decayed in one pass) when running on TPU; see
 ``FedConfig.agg_impl``.
@@ -44,11 +57,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig
 from repro.core import aggregation as agg
 from repro.core import foolsgold as fg
+from repro.core.distributed import (
+    ClientComms,
+    MeshComms,
+    client_mesh,
+    client_spec,
+    replicated_spec,
+)
 from repro.core.resources import (
     ResourceState,
     TaskRequirement,
@@ -108,6 +129,11 @@ class FedAREngine:
     ``step``  — one communication round (jitted); the python-driver path.
     ``run``   — R rounds in one ``lax.scan`` (jitted once per R); no host
                 sync until the final histories come back stacked.
+
+    With ``FedConfig.mesh_shape > 1`` (and that many devices available) both
+    entry points run the round body inside a ``shard_map`` over the
+    ``clients`` mesh axis; the public API and the host-visible (N,)-shaped
+    histories are unchanged.
     """
 
     def __init__(
@@ -128,8 +154,14 @@ class FedAREngine:
             num_poisoners=fed.num_poisoners,
             seed=fed.seed,
         )
-        self._step = jax.jit(self._round_step)
-        self._run = jax.jit(self._run_scan, static_argnames=("rounds",))
+        self.mesh = client_mesh(fed)
+        self.comms: ClientComms = (
+            MeshComms(fed.client_axis, self.mesh.devices.size)
+            if self.mesh is not None
+            else ClientComms()
+        )
+        self._step = jax.jit(self._step_fn)
+        self._run = jax.jit(self._run_fn, static_argnames=("rounds",))
 
     # ------------------------------------------------------------------
     def init_state(self) -> EngineState:
@@ -149,22 +181,66 @@ class FedAREngine:
             round_idx=jnp.zeros((), jnp.int32),
         )
 
+    # -------------------------------------------------- PartitionSpecs
+    # Sharded leaves are the O(N*D) / O(N*samples) tensors; (N,) bookkeeping
+    # replicates so global selection / trust math is bit-identical to the
+    # single-device engine (O(N) bytes per device is noise next to the
+    # O(N*D/k) blocks).
+    def state_specs(self) -> EngineState:
+        Pc, Pr = client_spec(self.fed), replicated_spec()
+        return EngineState(
+            params=Pr,
+            trust=TrustState(Pr, Pr, Pr),
+            resources=ResourceState(Pr, Pr, Pr, Pr),
+            fg_history=Pc,
+            pending_delta=Pc,
+            pending_weight=Pr,
+            pending_issued=Pr,
+            pending_arrival=Pr,
+            pending_valid=Pr,
+            round_idx=Pr,
+        )
+
+    def data_specs(self) -> dict:
+        Pc, Pr = client_spec(self.fed), replicated_spec()
+        return {"x": Pc, "y": Pc, "sizes": Pr, "activations": Pc}
+
+    def _round_out_specs(self) -> RoundOutputs:
+        Pr = replicated_spec()
+        return RoundOutputs(Pr, Pr, Pr, Pr, Pr, Pr)
+
+    def _in_specs(self, eval_set, force_straggler):
+        Pr = replicated_spec()
+        return (
+            self.state_specs(),
+            self.data_specs(),
+            None if eval_set is None else (Pr, Pr),
+            None if force_straggler is None else Pr,
+        )
+
     # ------------------------------------------------------------------
     def _round_step(self, state: EngineState, data, eval_set, force_straggler):
         """One communication round, fully traceable.  ``data``: dict with
         stacked per-client arrays x (N, n, 784), y (N, n), sizes (N,),
-        activations (N,) int32 (0=relu, 1=softmax per Table II)."""
-        fed, cfg = self.fed, self.cfg
+        activations (N,) int32 (0=relu, 1=softmax per Table II).
+
+        Under mesh comms this body executes per-shard: ``data["x"/"y"/
+        "activations"]``, ``state.fg_history`` and ``state.pending_delta``
+        hold this shard's client block; everything (N,)-shaped is
+        replicated, and cross-shard reductions go through ``self.comms``."""
+        fed, cfg, comms = self.fed, self.cfg, self.comms
         key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), state.round_idx)
         k_sel, k_lat, _k_poi = jax.random.split(key, 3)
 
         # --- Algorithm 2 lines 6-10: CheckResource + trust sort + sample
+        # (global (N,) math, replicated across shards)
         selected, ok = select_clients(
             k_sel, state.trust, state.resources, self.req, fed
         )
 
         # --- lines 16-21 (ClientUpdate): local SGD on every client, vmapped
-        # over the fleet; non-participants are masked out of the aggregate
+        # over this shard's client block; non-participants are masked out of
+        # the aggregate
         def client_update(p_flat, x, y, act):
             p = unflatten(p_flat, self.template)
             new = local_sgd(
@@ -182,7 +258,7 @@ class FedAREngine:
         locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
             g_flat, data["x"], data["y"], data["activations"]
         )
-        deltas = locals_flat - g_flat[None, :]
+        deltas = locals_flat - g_flat[None, :]  # (N_loc, D)
 
         # --- virtual time: latency per client, straggler = late vs timeout
         model_bytes = self.dim * 4.0
@@ -206,13 +282,17 @@ class FedAREngine:
             active = selected
         else:
             active = selected & on_time
-        deviated = agg.deviation_mask(deltas, active, fed.deviation_gamma)
+        deviated = agg.deviation_mask(
+            deltas, active, fed.deviation_gamma, comms=comms
+        )
         contributing = active & ~deviated
         weights = data["sizes"].astype(jnp.float32)
         fg_history = state.fg_history
         if fed.foolsgold:
-            fg_history = fg.update_history(fg_history, deltas, contributing)
-            fgw = fg.foolsgold_weights(fg_history, contributing)
+            fg_history = fg.update_history(
+                fg_history, deltas, contributing, comms=comms
+            )
+            fgw = fg.foolsgold_weights(fg_history, contributing, comms=comms)
             weights = weights * fgw
 
         # --- lines 13-14: aggregate
@@ -227,7 +307,8 @@ class FedAREngine:
             # synchronous: waits for everyone selected (incl. stragglers)
             sync_active = selected & ~deviated
             g_new = agg.fedavg_aggregate(
-                g_flat, deltas, weights, sync_active, impl=fed.agg_impl
+                g_flat, deltas, weights, sync_active, impl=fed.agg_impl,
+                comms=comms,
             )
             round_time = jnp.max(jnp.where(selected, lat, 0.0))
         elif fed.aggregation == "async":
@@ -239,12 +320,14 @@ class FedAREngine:
         elif fed.aggregation == "async_seq":
             order = jnp.argsort(jnp.where(contributing, lat, jnp.inf))
             g_new = agg.async_aggregate(
-                g_flat, locals_flat, weights, contributing, order, fed
+                g_flat, locals_flat, weights, contributing, order, fed,
+                comms=comms,
             )
             round_time = jnp.full((), fed.timeout)
         else:  # fedar (timeout skip)
             g_new = agg.fedavg_aggregate(
-                g_flat, deltas, weights, contributing, impl=fed.agg_impl
+                g_flat, deltas, weights, contributing, impl=fed.agg_impl,
+                comms=comms,
             )
             round_time = jnp.full((), fed.timeout)
 
@@ -299,8 +382,11 @@ class FedAREngine:
         round's timeout window joins that round's aggregation) with a
         ``(1 + tau)^-0.5`` staleness discount.  One masked weighted reduction
         per round — no O(N) sequential fold, so this is the mode that scales
-        to 512-4096 clients."""
-        fed = self.fed
+        to 512-4096 clients.
+
+        Slot bookkeeping (admit/issued/arrival/valid) is (N,) and replicated;
+        only the delta buffer itself is a sharded (N_loc, D) block."""
+        fed, comms = self.fed, self.comms
         # rounds until the update reaches the server (0 = within timeout)
         lag = jnp.floor(lat / fed.timeout).astype(jnp.int32)
         # admit into a free slot, or supersede an in-flight STALE update with
@@ -308,7 +394,8 @@ class FedAREngine:
         # not clobber its own still-in-transit upload every round, or the
         # buffered update would never arrive
         admit = contributing & ((lag == 0) | ~pending["valid"])
-        delta_buf = jnp.where(admit[:, None], deltas, pending["delta"])
+        delta_buf = jnp.where(comms.local(admit)[:, None], deltas,
+                              pending["delta"])
         weight_buf = jnp.where(admit, weights, pending["weight"])
         issued = jnp.where(admit, round_idx, pending["issued"])
         arrival = jnp.where(admit, round_idx + lag, pending["arrival"])
@@ -327,6 +414,7 @@ class FedAREngine:
             delivered,
             staleness=staleness_arg,
             impl=fed.agg_impl,
+            comms=comms,
         )
         return g_new, dict(
             delta=delta_buf,
@@ -337,11 +425,33 @@ class FedAREngine:
         )
 
     # ------------------------------------------------------------------
-    def _run_scan(self, state, data, eval_set, force_straggler, *, rounds: int):
-        def body(carry, _):
-            return self._round_step(carry, data, eval_set, force_straggler)
+    def _shard(self, fn, state, data, eval_set, force_straggler):
+        """Run ``fn(state, data, eval_set, force_straggler)`` per client
+        shard (or as-is on one device).  Both entry points share this so the
+        spec plumbing cannot diverge between ``step`` and ``run``."""
+        if self.mesh is None:
+            return fn(state, data, eval_set, force_straggler)
+        return shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=self._in_specs(eval_set, force_straggler),
+            out_specs=(self.state_specs(), self._round_out_specs()),
+            check_rep=False,
+        )(state, data, eval_set, force_straggler)
 
-        return jax.lax.scan(body, state, None, length=rounds)
+    def _step_fn(self, state, data, eval_set, force_straggler):
+        return self._shard(
+            self._round_step, state, data, eval_set, force_straggler
+        )
+
+    def _run_fn(self, state, data, eval_set, force_straggler, *, rounds: int):
+        def scan_rounds(state, data, eval_set, force_straggler):
+            def body(carry, _):
+                return self._round_step(carry, data, eval_set, force_straggler)
+
+            return jax.lax.scan(body, state, None, length=rounds)
+
+        return self._shard(scan_rounds, state, data, eval_set, force_straggler)
 
     # ------------------------------------------------------------------
     def step(self, state, data, *, eval_set=None, force_straggler=None):
@@ -360,7 +470,7 @@ class FedAREngine:
         benchmark baseline the scan engine is measured against."""
         outs = []
         for _ in range(rounds):
-            state, out = self._round_step(
+            state, out = self._step_fn(
                 state, data, eval_set, force_straggler
             )
             # per-round host round-trip, exactly like the seed driver

@@ -8,6 +8,12 @@ keeps the seed's public API (``run_round`` / ``run`` + a ``history`` dict of
 per-round rows) while delegating to the fully-jitted engine.  ``run`` executes
 every round inside one ``lax.scan`` by default (``driver="scan"``);
 ``driver="python"`` keeps the one-jitted-dispatch-per-round loop.
+
+Multi-device: pass ``FedConfig(mesh_shape=k)`` to run the engine's rounds
+sharded over a ``clients`` mesh axis (``core/distributed.py``) — the server
+API and history layout are unchanged; with one device the config falls back
+to the single-device path.  ``FedARServer.mesh`` exposes the active mesh
+(``None`` when unsharded).
 """
 from __future__ import annotations
 
@@ -50,6 +56,11 @@ class FedARServer:
         }
 
     # -- live views of the engine carry (the seed exposed these directly) --
+    @property
+    def mesh(self):
+        """The engine's ``clients`` mesh, or ``None`` on a single device."""
+        return self.engine.mesh
+
     @property
     def params(self):
         return unflatten(self.state.params, self.template)

@@ -4,27 +4,59 @@ Clients that repeatedly send *similar* gradient updates (sybils pushing a
 common poisoned objective) get their aggregation learning rate scaled down.
 Implementation follows Fung et al.: cosine similarity over per-client
 historical aggregate updates, pardoning, then logit re-scaling.
+
+The pairwise (N, N) cosine matrix is the engine's one all-to-all.  Written
+against ``ClientComms`` it becomes a gathered block product: each client
+shard row-normalizes its local history block, the unit projections are
+gathered across the client axis (the psum of block-embedded projections,
+scheduled as an all-gather), and every shard computes only its
+(N_loc, N) similarity block plus a gathered row-max for pardoning — so the
+whole defense stays inside the jitted shard_map program.  With identity
+comms this reduces exactly to the dense single-device math.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.core.distributed import ClientComms
 
-def foolsgold_weights(history: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
-    """history: (N, D) per-client cumulative update vectors.
-    active: (N,) bool — clients contributing this round.
-    Returns (N,) aggregation weights in [0, 1]."""
-    N = history.shape[0]
+_IDENTITY = ClientComms()
+
+
+def _row_offset(comms: ClientComms, n_loc: int):
+    """Global client index of this shard's first row (0 on one device)."""
+    if comms.axis is None:
+        return 0
+    return jax.lax.axis_index(comms.axis) * n_loc
+
+
+def foolsgold_weights(
+    history: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    comms: ClientComms = _IDENTITY,
+) -> jnp.ndarray:
+    """history: shard-local (N_loc, D) per-client cumulative update vectors.
+    active: replicated (N,) bool — clients contributing this round.
+    Returns replicated (N,) aggregation weights in [0, 1]."""
+    N = active.shape[0]
+    n_loc = history.shape[0]
     norm = jnp.linalg.norm(history, axis=1, keepdims=True)
     unit = history / jnp.maximum(norm, 1e-9)
-    cs = unit @ unit.T  # (N, N)
-    cs = cs - jnp.eye(N)
-    cs = jnp.where(active[:, None] & active[None, :], cs, -1.0)
+    unit_full = comms.all_gather(unit)  # (N, D)
+    cs = unit @ unit_full.T  # (N_loc, N) local similarity block
+    # zero the self-similarity diagonal of this shard's block
+    rows = jnp.arange(n_loc) + _row_offset(comms, n_loc)
+    cs = cs - (rows[:, None] == jnp.arange(N)[None, :]).astype(cs.dtype)
+    active_loc = comms.local(active)
+    cs = jnp.where(active_loc[:, None] & active[None, :], cs, -1.0)
 
-    maxcs = jnp.max(cs, axis=1)  # v_i
+    maxcs_loc = jnp.max(cs, axis=1)  # v_i for this shard's rows
+    maxcs = comms.all_gather(maxcs_loc)  # (N,) v_j for every column
     # pardoning: if v_j > v_i, rescale cs_ij by v_i / v_j
-    ratio = maxcs[:, None] / jnp.maximum(maxcs[None, :], 1e-9)
-    cs = jnp.where(maxcs[None, :] > maxcs[:, None], cs * ratio, cs)
+    ratio = maxcs_loc[:, None] / jnp.maximum(maxcs[None, :], 1e-9)
+    cs = jnp.where(maxcs[None, :] > maxcs_loc[:, None], cs * ratio, cs)
 
     wv = 1.0 - jnp.max(cs, axis=1)
     wv = jnp.clip(wv, 0.0, 1.0)
@@ -32,9 +64,16 @@ def foolsgold_weights(history: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
     wv = jnp.where(wv == 1.0, 0.99, wv)
     logit = jnp.log(wv / jnp.maximum(1.0 - wv, 1e-9) + 1e-9) + 0.5
     wv = jnp.clip(logit, 0.0, 1.0)
-    return jnp.where(active, wv, 0.0)
+    return comms.all_gather(jnp.where(active_loc, wv, 0.0))
 
 
-def update_history(history: jnp.ndarray, deltas: jnp.ndarray, active: jnp.ndarray):
-    """Accumulate flattened client deltas into the similarity history."""
-    return history + jnp.where(active[:, None], deltas, 0.0)
+def update_history(
+    history: jnp.ndarray,
+    deltas: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    comms: ClientComms = _IDENTITY,
+):
+    """Accumulate flattened client deltas into the similarity history.
+    ``history`` / ``deltas`` are shard-local blocks; ``active`` replicated."""
+    return history + jnp.where(comms.local(active)[:, None], deltas, 0.0)

@@ -78,20 +78,31 @@ def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
 def scaled_fleet(num_clients: int, *, seed: int = 0,
                  num_poisoners: int | None = None,
                  poison_frac: float = POISON_FRAC, flip_frac: float = 0.6,
-                 samples_per_client: int | None = 200):
+                 samples_per_client: int | None = 200,
+                 return_poisoners: bool = False):
     """Table II tiled out to ``num_clients`` robots for engine-scale runs.
 
     Client ``i`` inherits profile ``TABLE_II[i % 12]`` (label subset,
     activation, sample count); the LAST ``num_poisoners`` clients label-flip,
     matching the poisoner positions of ``resources.make_fleet`` so the data
     poisoners are also the resource-model poisoners.  ``num_poisoners=None``
-    scales the paper's 2-of-12 fraction."""
+    scales the paper's 2-of-12 fraction.  ``return_poisoners=True`` also
+    returns the (num_clients,) bool poisoner mask.
+
+    The stacked arrays shard cleanly over the engine's ``clients`` mesh axis
+    (``FedAREngine.data_specs``) as long as ``num_clients`` divides by
+    ``FedConfig.mesh_shape``."""
     if num_poisoners is None:
         num_poisoners = int(round(num_clients * poison_frac))
     profiles = [TABLE_II[i % len(TABLE_II)] for i in range(num_clients)]
     poisoners = set(range(num_clients - num_poisoners, num_clients))
-    return _build_fleet(profiles, poisoners, flip_frac=flip_frac, seed=seed,
+    data = _build_fleet(profiles, poisoners, flip_frac=flip_frac, seed=seed,
                         samples_per_client=samples_per_client)
+    if return_poisoners:
+        mask = np.zeros(num_clients, bool)
+        mask[list(poisoners)] = True
+        return data, mask
+    return data
 
 
 def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 0):
@@ -106,4 +117,5 @@ def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 
         cuts = (np.cumsum(props) * len(idxs)).astype(int)[:-1]
         for cid, part in enumerate(np.split(idxs, cuts)):
             client_idx[cid].extend(part.tolist())
-    return [np.asarray(sorted(ci)) for ci in client_idx]
+    # dtype pinned so a client that drew no samples still indexes cleanly
+    return [np.asarray(sorted(ci), dtype=np.int64) for ci in client_idx]

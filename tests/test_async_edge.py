@@ -1,0 +1,119 @@
+"""Buffered-async edge cases: slot reuse under repeated selection, the
+staleness discount at tau=0, and agreement between the buffered (``async``)
+and legacy sequential (``async_seq``) modes when nothing is ever late."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fedar_mnist import MnistConfig, fleet_fed
+from repro.core.aggregation import staleness_weight
+from repro.core.engine import FedAREngine
+from repro.core.resources import TaskRequirement
+from repro.data.federated import scaled_fleet, table2_fleet
+
+
+def _data(samples=40, **kw):
+    return {
+        k: jnp.asarray(v)
+        for k, v in table2_fleet(samples_per_client=samples, **kw).items()
+    }
+
+
+def test_straggler_slot_is_not_clobbered_by_reselection():
+    """A straggler selected again while its upload is still in transit must
+    NOT overwrite the buffered slot — the original issue round sticks until
+    the update is delivered, then the slot frees."""
+    fed = fleet_fed(12, local_epochs=1, timeout=8.0, aggregation="async",
+                    selection="random", client_fraction=1.0, foolsgold=False)
+    engine = FedAREngine(MnistConfig(), fed, TaskRequirement())
+    data = _data(poisoners=())
+    force = np.ones(12, bool)  # everyone lands 3 * timeout late (lag = 3)
+    state = engine.init_state()
+
+    state, _ = engine.step(state, data, force_straggler=jnp.asarray(force))
+    issued0 = np.asarray(state.pending_issued).copy()
+    valid0 = np.asarray(state.pending_valid).copy()
+    assert valid0.any()  # round-0 uploads are in transit
+
+    # rounds 1-2: the same clients are selected again before their round-0
+    # upload arrives; the slot must keep the round-0 issue tag
+    for _ in range(2):
+        state, _ = engine.step(state, data, force_straggler=jnp.asarray(force))
+        np.testing.assert_array_equal(
+            np.asarray(state.pending_issued)[valid0], issued0[valid0]
+        )
+        assert np.asarray(state.pending_valid)[valid0].all()
+
+    # round 3: arrival round reached -> delivered, slots freed for reuse
+    state, _ = engine.step(state, data, force_straggler=jnp.asarray(force))
+    freed = valid0 & ~np.asarray(state.pending_valid)
+    reissued = valid0 & (np.asarray(state.pending_issued) != issued0)
+    assert freed.sum() + reissued.sum() > 0  # delivery happened
+    # a freed-and-readmitted slot carries the NEW issue round
+    assert (np.asarray(state.pending_issued)[reissued] > issued0[reissued]).all()
+
+
+def test_staleness_discount_is_identity_at_tau_zero():
+    """(1 + tau)^-0.5 == 1 exactly for a fresh update; the poly curve decays
+    monotonically for buffered ones."""
+    tau = jnp.asarray([0.0, 1.0, 3.0, 8.0])
+    w = np.asarray(staleness_weight(tau))
+    assert w[0] == 1.0
+    np.testing.assert_allclose(w, (1.0 + np.asarray(tau)) ** -0.5)
+    assert (np.diff(w) < 0).all()
+
+
+def test_async_equals_fedar_when_everything_arrives_on_time():
+    """With every upload inside the timeout the no-wait buffer degenerates to
+    the paper's timeout-skip aggregation: same params, same trust, and the
+    buffer never holds anything."""
+    kw = dict(local_epochs=1, timeout=1e9, foolsgold=False)
+    e_async = FedAREngine(
+        MnistConfig(), fleet_fed(12, aggregation="async", **kw),
+        TaskRequirement(),
+    )
+    e_fedar = FedAREngine(
+        MnistConfig(), fleet_fed(12, aggregation="fedar", **kw),
+        TaskRequirement(),
+    )
+    data = _data()
+    sa = e_async.init_state()
+    sf = e_fedar.init_state()
+    for _ in range(4):
+        sa, oa = e_async.step(sa, data)
+        sf, of = e_fedar.step(sf, data)
+        assert not np.asarray(sa.pending_valid).any()  # nothing ever buffered
+        np.testing.assert_array_equal(np.asarray(oa.selected),
+                                      np.asarray(of.selected))
+        np.testing.assert_allclose(np.asarray(sa.params),
+                                   np.asarray(sf.params), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sa.trust.score),
+                               np.asarray(sf.trust.score), atol=1e-6)
+
+
+def test_async_seq_agrees_with_async_when_on_time():
+    """The legacy sequential fold and the buffered reduction agree when every
+    update arrives on time and rounds have a single participant with full
+    mixing weight (alpha=1, equal sizes): both then hand the round to that
+    client's local model, so the trajectories coincide."""
+    n = 24
+    kw = dict(local_epochs=1, timeout=1e9, foolsgold=False,
+              client_fraction=1.0 / n, staleness_alpha=1.0)
+    e_buf = FedAREngine(
+        MnistConfig(), fleet_fed(n, aggregation="async", **kw),
+        TaskRequirement(),
+    )
+    e_seq = FedAREngine(
+        MnistConfig(), fleet_fed(n, aggregation="async_seq", **kw),
+        TaskRequirement(),
+    )
+    data = {
+        k: jnp.asarray(v)
+        for k, v in scaled_fleet(n, samples_per_client=40,
+                                 num_poisoners=0).items()
+    }
+    sb, _ = e_buf.run(e_buf.init_state(), data, rounds=5)
+    ss, ob = e_seq.run(e_seq.init_state(), data, rounds=5)
+    np.testing.assert_allclose(np.asarray(sb.params), np.asarray(ss.params),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sb.trust.score),
+                               np.asarray(ss.trust.score), atol=1e-6)

@@ -1,0 +1,52 @@
+"""Pins the known FoolsGold misfire on homogeneous fleets (ROADMAP).
+
+The tiled Table II shards at engine scale give many honest clients the same
+label subset, so their updates look sybil-similar and FoolsGold crushes
+their aggregation weight (verified at N=128: acc 0.15 with it on vs 0.95
+off at full training length; the shortened run here shows the same split).
+The xfail flips to passing when the cluster-aware variant lands.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.fedar_mnist import fleet_fed, small_model
+from repro.core.engine import FedAREngine
+from repro.core.resources import TaskRequirement
+from repro.data.federated import scaled_fleet
+from repro.data.synthetic import make_digits
+
+N, ROUNDS = 128, 6
+
+
+def _final_acc(foolsgold: bool) -> float:
+    fed = fleet_fed(N, local_epochs=2, foolsgold=foolsgold)
+    engine = FedAREngine(small_model(32), fed, TaskRequirement())
+    data = {
+        k: jnp.asarray(v)
+        for k, v in scaled_fleet(N, samples_per_client=100).items()
+    }
+    ex, ey = make_digits(300, seed=99)
+    _, outs = engine.run(
+        engine.init_state(), data, rounds=ROUNDS, eval_set=(ex, ey)
+    )
+    return float(outs.acc[-1])
+
+
+def test_homogeneous_fleet_learns_with_foolsgold_off():
+    """Sanity anchor: the tiled fleet itself trains fine — the misfire below
+    is FoolsGold's doing, not the data's."""
+    assert _final_acc(foolsgold=False) > 0.65
+
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="FoolsGold misfires on homogeneous tiled fleets: honest clients "
+    "sharing a Table II profile look like sybils and lose their aggregation "
+    "weight (ROADMAP open item; needs the cluster-aware variant)",
+)
+def test_foolsgold_keeps_honest_accuracy_on_homogeneous_fleet():
+    """Desired behavior: enabling the defense must not collapse accuracy on
+    an all-honest-profile fleet (currently ~0.3 vs ~0.8 off)."""
+    acc_on = _final_acc(foolsgold=True)
+    acc_off = _final_acc(foolsgold=False)
+    assert acc_on > 0.8 * acc_off

@@ -1,0 +1,129 @@
+"""Property tests for the federated data layer (hypothesis, via the
+``_hypothesis_compat`` shim): ``dirichlet_partition`` partition laws and
+``scaled_fleet`` fleet invariants."""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.data.federated import TABLE_II, dirichlet_partition, scaled_fleet
+
+NUM_SAMPLES = 600
+NUM_CLASSES = 10
+
+
+def _labels(n=NUM_SAMPLES):
+    return np.arange(n) % NUM_CLASSES
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    num_clients=st.integers(min_value=1, max_value=10),
+    alpha=st.floats(min_value=0.05, max_value=20.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dirichlet_partition_is_a_partition(num_clients, alpha, seed):
+    """Client index sets are disjoint and cover every sample exactly once,
+    for any client count, concentration, and seed."""
+    y = _labels()
+    x = np.zeros((len(y), 4))
+    parts = dirichlet_partition(x, y, num_clients, alpha=alpha, seed=seed)
+    assert len(parts) == num_clients
+    allidx = np.concatenate(parts) if parts else np.array([], np.int64)
+    assert len(allidx) == len(y)  # cover, and (with the next line) disjoint
+    assert np.array_equal(np.sort(allidx), np.arange(len(y)))
+    for p in parts:  # indices stay usable even for empty clients
+        assert p.dtype.kind == "i"
+        _ = y[p]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=50))
+def test_dirichlet_alpha_tiny_concentrates_classes(seed):
+    """alpha -> 0 degeneracy: each class collapses onto ~one client."""
+    y = np.repeat(np.arange(NUM_CLASSES), 100)
+    x = np.zeros((len(y), 4))
+    parts = dirichlet_partition(x, y, 6, alpha=1e-3, seed=seed)
+    max_share = [
+        max(np.sum(y[p] == c) for p in parts) / 100 for c in range(NUM_CLASSES)
+    ]
+    assert np.mean(max_share) > 0.8
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=50))
+def test_dirichlet_alpha_huge_balances_clients(seed):
+    """alpha -> inf degeneracy: client totals approach uniform 1/C."""
+    y = np.repeat(np.arange(NUM_CLASSES), 100)
+    x = np.zeros((len(y), 4))
+    parts = dirichlet_partition(x, y, 6, alpha=1e3, seed=seed)
+    shares = np.array([len(p) for p in parts]) / len(y)
+    assert shares.max() < 0.25  # uniform is 1/6
+    assert shares.min() > 0.08
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    num_clients=st.integers(min_value=1, max_value=48),
+    data=st.data(),
+)
+def test_scaled_fleet_invariants(num_clients, data):
+    """Poisoner count and placement, rectangular padding, size bookkeeping."""
+    num_poisoners = data.draw(
+        st.integers(min_value=0, max_value=num_clients), label="poisoners"
+    )
+    samples = data.draw(
+        st.one_of(st.none(), st.integers(min_value=20, max_value=60)),
+        label="samples_per_client",
+    )
+    fleet, poison = scaled_fleet(
+        num_clients, num_poisoners=num_poisoners, samples_per_client=samples,
+        return_poisoners=True,
+    )
+    # poisoner bookkeeping: exactly the LAST num_poisoners clients
+    assert poison.shape == (num_clients,) and poison.sum() == num_poisoners
+    if num_poisoners:
+        assert poison[-num_poisoners:].all()
+        assert not poison[:-num_poisoners].any()
+
+    # rectangular padding: every stacked array shares the max sample count
+    n_max = int(fleet["sizes"].max())
+    assert fleet["x"].shape == (num_clients, n_max, 784)
+    assert fleet["y"].shape == (num_clients, n_max)
+
+    for i in range(num_clients):
+        labels, act, n_profile = TABLE_II[i % len(TABLE_II)]
+        n_i = min(n_profile, samples) if samples else n_profile
+        # size bookkeeping follows the (possibly capped) Table II profile
+        assert int(fleet["sizes"][i]) == n_i
+        assert int(fleet["activations"][i]) == act
+        # wrap-around padding repeats the client's own real samples
+        if 2 * n_i <= n_max:
+            np.testing.assert_array_equal(
+                fleet["x"][i, n_i : 2 * n_i], fleet["x"][i, :n_i]
+            )
+            np.testing.assert_array_equal(
+                fleet["y"][i, n_i : 2 * n_i], fleet["y"][i, :n_i]
+            )
+
+
+def test_scaled_fleet_poisoners_flip_labels():
+    """The poisoner mask marks clients whose labels are actually corrupted:
+    same seed with flipping disabled differs only on poisoner rows."""
+    clean = scaled_fleet(24, samples_per_client=50, flip_frac=0.0)
+    dirty, poison = scaled_fleet(
+        24, samples_per_client=50, flip_frac=0.6, return_poisoners=True
+    )
+    differs = (clean["y"] != dirty["y"]).any(axis=1)
+    assert differs[poison].all()
+    assert not differs[~poison].any()
+
+
+def test_scaled_fleet_rejects_nothing_but_matches_make_fleet_fraction():
+    """Default num_poisoners=None scales the paper's 2-of-12 fraction."""
+    _, poison = scaled_fleet(48, samples_per_client=30, return_poisoners=True)
+    assert poison.sum() == 8
+
+
+def test_dirichlet_partition_single_client_gets_everything():
+    y = _labels(100)
+    parts = dirichlet_partition(np.zeros((100, 2)), y, 1, alpha=0.5, seed=3)
+    assert len(parts) == 1 and np.array_equal(parts[0], np.arange(100))
