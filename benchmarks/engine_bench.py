@@ -10,10 +10,15 @@ device count: every count spawns a worker process with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=k`` (the flag must land
 before jax initializes), so one invocation records the 1-vs-k scaling curve.
 
+The ``defense`` axis re-runs the scan engine per robust-defense strategy
+(none vs dense foolsgold vs the sketched cluster-aware variant), pricing
+the O(N*D) dense similarity gather against the (N, r) sketch.
+
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
-Emits ``BENCH_engine.json`` (rounds/sec per fleet size + per device count)
-for the perf trajectory; also wired into ``benchmarks.run``.
+Emits ``BENCH_engine.json`` (rounds/sec per fleet size, per device count
+and per defense strategy) for the perf trajectory; also wired into
+``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -36,11 +41,14 @@ QUICK_SIZES = (12, 128)
 SHARDED_SIZES = (128, 512)
 QUICK_SHARDED_SIZES = (128,)
 DEVICE_COUNTS = (1, 8)
+DEFENSES = ("none", "foolsgold", "foolsgold_sketch")
+DEFENSE_SIZES = (128, 512)
+QUICK_DEFENSE_SIZES = (128,)
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 
 
-def _make(n: int, *, mesh_shape: int | None = None):
-    fed = fleet_fed(n, local_epochs=1, local_batch_size=20, foolsgold=False,
+def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none"):
+    fed = fleet_fed(n, local_epochs=1, local_batch_size=20, defense=defense,
                     mesh_shape=mesh_shape)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
     data = {
@@ -103,6 +111,18 @@ def bench_sharded_worker(device_count: int, quick: bool) -> dict:
     return out
 
 
+def bench_defense(quick: bool = False) -> dict:
+    """rounds/sec of the scan engine per defense strategy: the cost of the
+    dense (N, D) FoolsGold gather vs the (N, r) sketch vs no defense."""
+    out = {}
+    for n in QUICK_DEFENSE_SIZES if quick else DEFENSE_SIZES:
+        out[str(n)] = {}
+        for defense in DEFENSES:
+            engine, data = _make(n, defense=defense)
+            out[str(n)][defense] = 1.0 / _time_scan(engine, data, rounds=4)
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -127,10 +147,13 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     return result
 
 
-def write_json(summary, devices=None, path: str = "BENCH_engine.json") -> None:
+def write_json(summary, devices=None, defense=None,
+               path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
         payload["sharded_rounds_per_sec_by_devices"] = devices
+    if defense is not None:
+        payload["defense_rounds_per_sec"] = defense
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -152,10 +175,15 @@ def main() -> None:
         return
     rows, summary = bench(quick=quick)
     devices = bench_devices(quick=quick, counts=_parse_counts(argv))
-    write_json(summary, devices)
+    defense = bench_defense(quick=quick)
+    write_json(summary, devices, defense)
     for k, per_n in devices.items():
         for n, rps in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / rps, 1),
+                         round(rps, 2)))
+    for n, per_d in defense.items():
+        for d, rps in per_d.items():
+            rows.append((f"engine_scan_N{n}_{d}", round(1e6 / rps, 1),
                          round(rps, 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

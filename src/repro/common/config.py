@@ -198,7 +198,33 @@ class FedConfig:
     selection: str = "trust"
     staleness_alpha: float = 0.6  # FedAsync mixing weight
     staleness_decay: str = "poly"  # poly | const
+    # --- robust-defense subsystem (core/defense.py) ---
+    # legacy on/off switch; still honored when ``defense`` is unset
     foolsgold: bool = True
+    # defense strategy: None -> legacy mapping ("foolsgold" iff ``foolsgold``);
+    #   "none"             -- no similarity defense
+    #   "foolsgold"        -- dense Fung et al. re-weighting (the paper's
+    #                         §III.B.6 choice; O(N*D) history + gather)
+    #   "foolsgold_sketch" -- cluster-aware count-sketch variant: history and
+    #                         the cross-shard gather live in a fixed r-dim
+    #                         projection (O(N*r) payload), and honest-but-
+    #                         similar clients are pardoned via effective
+    #                         cluster multiplicity instead of raw max-cosine
+    defense: Optional[str] = None
+    # count-sketch width r for "foolsgold_sketch" (JL error ~ 1/sqrt(r))
+    defense_sketch_dim: int = 256
+    # per-round exponential decay of the defense history (1.0 = accumulate
+    # without bound, the legacy behavior; < 1 keeps long runs in fp32 range)
+    defense_history_decay: float = 1.0
+    # similarity block-product backend: auto (Pallas kernel on TPU, einsum
+    # elsewhere) | kernel | einsum — mirrors ``agg_impl``
+    defense_impl: str = "auto"
+    # cluster-aware knobs: soft cluster mass m_i = 1 + sum_j relu(cs_ij)^power;
+    # clients keep full weight while m_i <= slack * median(m), larger
+    # (sybil-sized) clusters decay as (slack*median/m)^sharpness
+    defense_cluster_power: float = 8.0
+    defense_cluster_slack: float = 5.0
+    defense_cluster_sharpness: float = 3.0
     # --- client-mesh sharding (core/distributed.py + core/engine.py) ---
     # mesh_shape: devices along the client axis of the engine's shard_map.
     # None or 1 keeps the single-device path (exact seed numerics); k > 1
@@ -209,6 +235,14 @@ class FedConfig:
     mesh_shape: Optional[int] = None
     client_axis: str = "clients"
     seed: int = 0
+
+    @property
+    def resolved_defense(self) -> str:
+        """Active defense strategy name (``defense`` wins over the legacy
+        ``foolsgold`` boolean)."""
+        if self.defense is not None:
+            return self.defense
+        return "foolsgold" if self.foolsgold else "none"
 
 
 @dataclass(frozen=True)

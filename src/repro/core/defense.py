@@ -1,0 +1,167 @@
+"""Pluggable robust-defense subsystem (§III.B.6, selected via
+``FedConfig.defense``).
+
+The engine's scan body screens "clients that infuse incorrect models"
+through one generic interface instead of hard-wiring FoolsGold: a strategy
+owns a carried history block (its shape, its per-round update incl. decay)
+and a per-round ``weights`` statistic over it.  Strategies:
+
+  ``none``              -- no carried history (N, 0), no re-weighting.
+  ``foolsgold``         -- the paper's dense Fung et al. statistic over the
+                           (N, D) cumulative update history; the sharded
+                           engine must gather the full (N, D) unit history,
+                           so per-device memory is O(N*D).
+  ``foolsgold_sketch``  -- cluster-aware sketched variant: client deltas
+                           are count-sketched D -> r (fixed random signed
+                           bucketing, r = ``defense_sketch_dim``) *before*
+                           entering the history, so the carried state is a
+                           sharded (N, r/k) block and the cross-shard
+                           gather ships (N, r) instead of (N, D) — per-
+                           device defense memory O(N*r/k + N*D/k) and an
+                           all-to-all payload cut by ~D/r.  Weights come
+                           from ``foolsgold.cluster_weights`` (effective
+                           cluster multiplicity), which fixes the
+                           homogeneous-fleet misfire that the dense
+                           max-cosine statistic is pinned for.
+
+The registry leaves room for krum / trimmed-mean style strategies: add a
+``DefenseStrategy`` subclass and an entry in ``_STRATEGIES``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FedConfig
+from repro.core import foolsgold as fg
+from repro.core.distributed import ClientComms
+
+_IDENTITY = ClientComms()
+
+
+class DefenseStrategy:
+    """Interface the engine round body calls, strategy-agnostically.
+
+    ``history_dim``    -- width of the carried per-client history block
+                          (0 = strategy carries no state).
+    ``update_history`` -- fold this round's shard-local deltas (N_loc, D)
+                          into the shard-local history block.
+    ``weights``        -- replicated (N,) aggregation weights in [0, 1],
+                          or ``None`` when the strategy does not re-weight
+                          (lets the engine skip the multiply entirely).
+    """
+
+    name = "none"
+
+    def history_dim(self, model_dim: int) -> int:
+        return 0
+
+    def update_history(self, history, deltas, active, *,
+                       comms: ClientComms = _IDENTITY):
+        return history
+
+    def weights(self, history, active, *, comms: ClientComms = _IDENTITY):
+        return None
+
+
+class NoDefense(DefenseStrategy):
+    """Aggregation weights pass through untouched."""
+
+
+class FoolsGoldDefense(DefenseStrategy):
+    """Dense Fung et al. re-weighting over the (N, D) update history."""
+
+    name = "foolsgold"
+
+    def __init__(self, fed: FedConfig, model_dim: int):
+        self.decay = fed.defense_history_decay
+        self.impl = fed.defense_impl
+
+    def history_dim(self, model_dim: int) -> int:
+        return model_dim
+
+    def update_history(self, history, deltas, active, *,
+                       comms: ClientComms = _IDENTITY):
+        return fg.update_history(
+            history, deltas, active, decay=self.decay, comms=comms
+        )
+
+    def weights(self, history, active, *, comms: ClientComms = _IDENTITY):
+        return fg.foolsgold_weights(
+            history, active, comms=comms, impl=self.impl
+        )
+
+
+class SketchedFoolsGold(DefenseStrategy):
+    """Cluster-aware FoolsGold over a count-sketched (N, r) history.
+
+    The D -> r projection is a count sketch: coordinate d adds
+    ``sign[d] * x[d]`` into bucket ``bucket[d]``.  It preserves inner
+    products in expectation with JL-style error O(1/sqrt(r)), and the
+    bucket/sign tables are derived from ``FedConfig.seed`` alone, so every
+    shard (and the single-device reference path) projects identically."""
+
+    name = "foolsgold_sketch"
+
+    def __init__(self, fed: FedConfig, model_dim: int):
+        self.r = fed.defense_sketch_dim
+        self.decay = fed.defense_history_decay
+        self.impl = fed.defense_impl
+        self.power = fed.defense_cluster_power
+        self.slack = fed.defense_cluster_slack
+        self.sharpness = fed.defense_cluster_sharpness
+        rng = np.random.default_rng(fed.seed + 0x5EED)
+        self.bucket = jnp.asarray(
+            rng.integers(0, self.r, model_dim), jnp.int32
+        )
+        self.sign = jnp.asarray(
+            rng.choice(np.float32([-1.0, 1.0]), model_dim), jnp.float32
+        )
+
+    def history_dim(self, model_dim: int) -> int:
+        return self.r
+
+    def sketch(self, rows):
+        """(n, D) -> (n, r) signed-bucket count sketch."""
+        out = jnp.zeros((rows.shape[0], self.r), rows.dtype)
+        return out.at[:, self.bucket].add(rows * self.sign[None, :])
+
+    def update_history(self, history, deltas, active, *,
+                       comms: ClientComms = _IDENTITY):
+        return fg.update_history(
+            history, self.sketch(deltas), active, decay=self.decay,
+            comms=comms,
+        )
+
+    def weights(self, history, active, *, comms: ClientComms = _IDENTITY):
+        return fg.cluster_weights(
+            history,
+            active,
+            comms=comms,
+            impl=self.impl,
+            power=self.power,
+            slack=self.slack,
+            sharpness=self.sharpness,
+        )
+
+
+_STRATEGIES = {
+    "none": NoDefense,
+    "foolsgold": FoolsGoldDefense,
+    "foolsgold_sketch": SketchedFoolsGold,
+}
+
+
+def make_defense(fed: FedConfig, model_dim: int) -> DefenseStrategy:
+    """Build the strategy ``FedConfig.resolved_defense`` names."""
+    name = fed.resolved_defense
+    try:
+        cls = _STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown FedConfig.defense={name!r} "
+            f"(known: {sorted(_STRATEGIES)})"
+        ) from None
+    if cls is NoDefense:
+        return NoDefense()
+    return cls(fed, model_dim)

@@ -20,9 +20,14 @@ Exports:
   ``MeshComms``     -- the same interface over ``jax.lax`` collectives
                        inside ``shard_map``: aggregation becomes a
                        trust*staleness-weighted ``psum`` that GSPMD
-                       schedules like a data-parallel reduction, and
-                       FoolsGold's pairwise similarity becomes a gathered
-                       block product (see ``foolsgold_weights``).
+                       schedules like a data-parallel reduction, and the
+                       defense's pairwise similarity becomes a gathered
+                       block product (see ``core/foolsgold.py``).  The
+                       ``gather_defense`` collective carries the defense
+                       history payload — (N, r) sketches for
+                       ``foolsgold_sketch`` instead of the dense (N, D)
+                       history — and records gathered shapes so tests can
+                       assert the payload stays sketched.
   ``client_spec`` / ``replicated_spec`` -- the ``PartitionSpec`` vocabulary
                        the engine threads through its in/out specs.
 
@@ -65,6 +70,11 @@ class ClientComms:
     axis: Optional[str] = None
     shards: int = 1
 
+    def __init__(self):
+        # gathered defense payload shapes, recorded at trace time — the
+        # mesh tests assert the sketch defense ships (N, r) not (N, D)
+        self.defense_gather_shapes: list = []
+
     def psum(self, x):
         """Sum a shard-local partial across the client axis."""
         return x
@@ -77,11 +87,22 @@ class ClientComms:
         """Slice this shard's client block out of a replicated (N, ...)."""
         return x
 
+    def gather_defense(self, x):
+        """All-gather a defense history payload (the sketched (N_loc, r)
+        projection, or the dense (N_loc, D) block for the legacy strategy)
+        across the client axis, recording the gathered shape.  This is the
+        defense's one all-to-all — its payload, not the O(N*D) history,
+        bounds the per-device defense footprint."""
+        out = self.all_gather(x)
+        self.defense_gather_shapes.append(tuple(out.shape))
+        return out
+
 
 class MeshComms(ClientComms):
     """``jax.lax`` collectives over the ``clients`` mesh axis."""
 
     def __init__(self, axis: str, shards: int):
+        super().__init__()
         self.axis, self.shards = axis, shards
 
     def psum(self, x):

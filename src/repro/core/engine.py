@@ -19,8 +19,10 @@ Scan-carry fields -> Algorithm 2 of the paper:
   ``EngineState.resources``     per-robot (M, B, E, F); battery E_m drains
                                 with participation -> CheckResource input
                                                             (lines 6-7)
-  ``EngineState.fg_history``    FoolsGold cumulative update vectors
-                                                            (line 13 weights)
+  ``EngineState.fg_history``    defense history block (``core/defense.py``:
+                                dense (N, D) cumulative updates for
+                                FoolsGold, count-sketched (N, r) for the
+                                cluster-aware variant)  (line 13 weights)
   ``EngineState.pending_*``     buffered-async in-flight updates: a
                                 fixed-size (one slot per client) buffer of
                                 deltas with issue/arrival round tags; late
@@ -62,7 +64,7 @@ from jax.experimental.shard_map import shard_map
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig
 from repro.core import aggregation as agg
-from repro.core import foolsgold as fg
+from repro.core.defense import make_defense
 from repro.core.distributed import (
     ClientComms,
     MeshComms,
@@ -103,7 +105,8 @@ class EngineState(NamedTuple):
     params: jnp.ndarray  # (D,) flat global model
     trust: TrustState  # (N,) score / participations / failures
     resources: ResourceState  # (N,) memory / bandwidth / battery / compute
-    fg_history: jnp.ndarray  # (N, D) FoolsGold history; (N, 0) if disabled
+    fg_history: jnp.ndarray  # (N, d) defense history; d = D dense FoolsGold,
+    #                          r sketched, 0 with the defense off
     pending_delta: jnp.ndarray  # (N, D) async buffer; (N, 0) unless async
     pending_weight: jnp.ndarray  # (N,) weight snapshot at issue time
     pending_issued: jnp.ndarray  # (N,) int32 round the update was computed
@@ -148,6 +151,7 @@ class FedAREngine:
         key = jax.random.PRNGKey(fed.seed)
         self.template = init_mnist(key, cfg)
         self.dim = flatten(self.template).shape[0]
+        self.defense = make_defense(fed, self.dim)
         self.resources0, self.poison_mask = make_fleet(
             fed.num_clients,
             num_starved=fed.num_starved,
@@ -166,7 +170,7 @@ class FedAREngine:
     # ------------------------------------------------------------------
     def init_state(self) -> EngineState:
         N, D = self.fed.num_clients, self.dim
-        fg_d = D if self.fed.foolsgold else 0
+        fg_d = self.defense.history_dim(D)
         buf_d = D if self.fed.aggregation == "async" else 0
         return EngineState(
             params=flatten(self.template),
@@ -275,7 +279,7 @@ class FedAREngine:
             lat = jnp.where(jnp.asarray(force_straggler), fed.timeout * 3.0, lat)
         on_time = lat <= fed.timeout
 
-        # --- line 11: deviation ban + FoolsGold weights
+        # --- line 11: deviation ban + robust-defense weights
         if fed.aggregation == "async":
             # no-wait: every participant's update eventually lands, so
             # screen all of them
@@ -287,12 +291,13 @@ class FedAREngine:
         )
         contributing = active & ~deviated
         weights = data["sizes"].astype(jnp.float32)
-        fg_history = state.fg_history
-        if fed.foolsgold:
-            fg_history = fg.update_history(
-                fg_history, deltas, contributing, comms=comms
-            )
-            fgw = fg.foolsgold_weights(fg_history, contributing, comms=comms)
+        # pluggable defense (core/defense.py): the strategy owns its carried
+        # history block (dense, sketched, or empty) and its weight statistic
+        fg_history = self.defense.update_history(
+            state.fg_history, deltas, contributing, comms=comms
+        )
+        fgw = self.defense.weights(fg_history, contributing, comms=comms)
+        if fgw is not None:
             weights = weights * fgw
 
         # --- lines 13-14: aggregate

@@ -105,6 +105,38 @@ def scaled_fleet(num_clients: int, *, seed: int = 0,
     return data
 
 
+def sybil_fleet(num_clients: int, num_sybils: int, *, seed: int = 0,
+                samples_per_client: int = 200, flip_frac: float = 1.0,
+                target_shift: int = 1):
+    """Honest tiled fleet + a replica sybil clique (the FoolsGold threat
+    model of Fung et al.): the last ``num_sybils`` clients all hold the SAME
+    poisoned shard — one dataset with labels shifted ``y -> (y +
+    target_shift) % 10`` on ``flip_frac`` of the samples, duplicated across
+    identities — so they push one coordinated objective and their updates
+    are near-identical.  (Independently-poisoned clients are *not* sybils:
+    their random flips decorrelate and no similarity defense can, or
+    should, fire on them — that is the deviation ban's job.)
+
+    Returns (data dict, (num_clients,) bool sybil mask)."""
+    profiles = [TABLE_II[i % len(TABLE_II)] for i in range(num_clients)]
+    data = _build_fleet(profiles, set(), flip_frac=0.0, seed=seed,
+                        samples_per_client=samples_per_client)
+    mask = np.zeros(num_clients, bool)
+    if num_sybils:
+        mask[num_clients - num_sybils:] = True
+        n = data["x"].shape[1]
+        x, y = make_digits(n, seed=seed * 101 + 999)
+        k = int(n * flip_frac)
+        idx = np.random.default_rng(seed + 7).choice(n, k, replace=False)
+        y[idx] = (y[idx] + target_shift) % 10
+        for i in np.where(mask)[0]:
+            data["x"][i] = x
+            data["y"][i] = y
+            data["activations"][i] = 1
+            data["sizes"][i] = n
+    return data, mask
+
+
 def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 0):
     """Non-IID label-dirichlet split.  Returns list of index arrays."""
     rng = np.random.default_rng(seed)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: the defense's (N_loc, N) similarity block product.
+
+Both defense strategies reduce to ``out = unit_loc @ unit_full.T`` — each
+client shard's row-normalized history block against the gathered fleet
+history.  For ``foolsgold_sketch`` the contracted axis is the sketch width
+r (~256), so the op is a skinny matmul whose operands stream cleanly
+through VMEM; for the dense strategy it is the full model dimension D and
+the contraction must be blocked.
+
+Tiling mirrors ``fedavg_agg``: a 2-D grid over (column blocks of N,
+contraction blocks of r/D).  Each grid step loads the (M, BLOCK_K) slab of
+the local block and the (BLOCK_N, BLOCK_K) slab of the gathered history,
+issues one MXU ``dot_general`` in fp32, and accumulates into the revisited
+(M, BLOCK_N) output tile (k is the innermost grid axis, so every output
+tile is completed before the grid moves to the next column block).  Blocks
+shrink together to keep the three VMEM tiles inside a fixed budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512  # columns of the gathered history per grid step
+BLOCK_K = 512  # contraction (sketch / model dim) per grid step
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def _fit_blocks(m: int, block_n: int, block_k: int) -> tuple[int, int]:
+    """Shrink (block_n, block_k) — multiples of 128, floor 128 — until the
+    fp32 tiles (m, bk) + (bn, bk) + (m, bn) fit the VMEM budget."""
+    bn, bk = max(128, block_n // 128 * 128), max(128, block_k // 128 * 128)
+
+    def usage(bn, bk):
+        return 4 * (m * bk + bn * bk + m * bn)
+
+    while usage(bn, bk) > VMEM_BUDGET_BYTES and (bn > 128 or bk > 128):
+        if bk >= bn and bk > 128:
+            bk -= 128
+        else:
+            bn -= 128
+    return bn, bk
+
+
+def _sim_kernel(a_ref, b_ref, o_ref):
+    # a_ref: (M, BLOCK_K); b_ref: (BLOCK_N, BLOCK_K); o_ref: (M, BLOCK_N)
+    part = jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(pl.program_id(1) > 0)
+    def _accum():
+        o_ref[...] += part
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_n", "block_k")
+)
+def sketch_similarity(
+    unit_loc,
+    unit_full,
+    *,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """unit_loc: (M, K) shard-local rows; unit_full: (N, K) gathered rows.
+    Returns (M, N) float32 ``unit_loc @ unit_full.T``.
+
+    N and K are zero-padded to block multiples (padded columns produce rows
+    /columns of zeros that are sliced off; the zero K-tail contributes
+    nothing to the contraction)."""
+    M, K = unit_loc.shape
+    N = unit_full.shape[0]
+    block_n, block_k = _fit_blocks(M, min(block_n, N), min(block_k, K))
+    pad_n, pad_k = (-N) % block_n, (-K) % block_k
+    if pad_k:
+        unit_loc = jnp.pad(unit_loc, ((0, 0), (0, pad_k)))
+        unit_full = jnp.pad(unit_full, ((0, 0), (0, pad_k)))
+    if pad_n:
+        unit_full = jnp.pad(unit_full, ((0, pad_n), (0, 0)))
+    Np, Kp = N + pad_n, K + pad_k
+    grid = (Np // block_n, Kp // block_k)  # k innermost: tiles accumulate
+    out = pl.pallas_call(
+        _sim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_n, block_k), lambda j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((M, block_n), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((M, Np), jnp.float32),
+        interpret=interpret,
+    )(unit_loc, unit_full)
+    return out[:, :N]

@@ -14,6 +14,15 @@ def fedavg_agg_ref(deltas, weights, staleness=None):
     return jnp.einsum("n,nd->d", w, deltas.astype(jnp.float32))
 
 
+def sketch_similarity_ref(unit_loc, unit_full):
+    """Defense similarity block: (M, K) @ (N, K).T -> (M, N) float32."""
+    return jnp.einsum(
+        "mk,nk->mn",
+        unit_loc.astype(jnp.float32),
+        unit_full.astype(jnp.float32),
+    )
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q,k,v: (B, S, H, hd) -> (B, S, H, hd).  Full-score reference."""
     B, S, H, hd = q.shape

@@ -162,3 +162,29 @@ def test_foolsgold_weights_in_unit_interval():
     hist = jax.random.normal(jax.random.PRNGKey(3), (8, 16))
     w = np.asarray(foolsgold_weights(hist, jnp.ones(8, bool)))
     assert np.all(w >= 0) and np.all(w <= 1)
+
+
+def test_foolsgold_clamp_is_finite_at_wv_extremes():
+    """The [0, 0.99] clamp (replacing the exact ``wv == 1.0`` compare) must
+    keep the logit finite and saturated-high for orthogonal histories
+    (max cosine 0 -> wv hits the clamp) and for anti-aligned ones (raw wv
+    2.0, clipped at the top) — no NaN/inf anywhere."""
+    orth = jnp.eye(4, 32)  # pairwise cosine exactly 0
+    w = np.asarray(foolsgold_weights(orth, jnp.ones(4, bool)))
+    assert np.all(np.isfinite(w)) and np.all(w == 1.0)
+    anti = jnp.concatenate([jnp.ones((1, 8)), -jnp.ones((1, 8))])
+    w = np.asarray(foolsgold_weights(anti, jnp.ones(2, bool)))
+    assert np.all(np.isfinite(w)) and np.all(w == 1.0)
+
+
+def test_foolsgold_near_one_wv_matches_exact_one():
+    """Near-duplicate negatives (wv = 1 - eps) slip past an exact float
+    compare; the clamp treats them like the saturated case instead of
+    feeding 1/eps into the logit."""
+    k = jax.random.PRNGKey(4)
+    base = jax.random.normal(k, (1, 64))
+    # one client nearly anti-aligned with everyone -> its max cosine ~ -1
+    hist = jnp.concatenate([base, base * 0.5, -base * (1.0 - 1e-7)])
+    w = np.asarray(foolsgold_weights(hist, jnp.ones(3, bool)))
+    assert np.all(np.isfinite(w))
+    assert w[2] == 1.0  # dissimilar client keeps full weight

@@ -1,0 +1,209 @@
+"""Pluggable defense subsystem: registry, count-sketch JL properties, decay.
+
+The sketched strategy's correctness rests on the count sketch preserving
+cosine geometry: the property tests below check the JL-style error bound
+across fleet/model sizes, exact preservation of replicas, and the
+linearity that makes sketch-then-accumulate equal accumulate-then-sketch.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common.config import FedConfig
+from repro.core.defense import (
+    FoolsGoldDefense,
+    NoDefense,
+    SketchedFoolsGold,
+    make_defense,
+)
+from repro.core.foolsgold import cluster_weights, update_history
+
+D = 512
+
+
+# ---------------------------------------------------------------------------
+# registry / config resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_builds_each_strategy():
+    assert isinstance(make_defense(FedConfig(defense="none"), D), NoDefense)
+    assert isinstance(
+        make_defense(FedConfig(defense="foolsgold"), D), FoolsGoldDefense
+    )
+    assert isinstance(
+        make_defense(FedConfig(defense="foolsgold_sketch"), D),
+        SketchedFoolsGold,
+    )
+
+
+def test_unknown_defense_raises():
+    with pytest.raises(ValueError, match="krum"):
+        make_defense(FedConfig(defense="krum"), D)
+
+
+def test_legacy_foolsgold_bool_still_resolves():
+    assert FedConfig(foolsgold=True).resolved_defense == "foolsgold"
+    assert FedConfig(foolsgold=False).resolved_defense == "none"
+    # explicit defense wins over the legacy boolean
+    assert FedConfig(foolsgold=True, defense="none").resolved_defense == "none"
+
+
+def test_history_dims():
+    assert make_defense(FedConfig(defense="none"), D).history_dim(D) == 0
+    assert make_defense(FedConfig(defense="foolsgold"), D).history_dim(D) == D
+    fed = FedConfig(defense="foolsgold_sketch", defense_sketch_dim=128)
+    assert make_defense(fed, D).history_dim(D) == 128
+
+
+# ---------------------------------------------------------------------------
+# count-sketch geometry
+# ---------------------------------------------------------------------------
+
+def _unit(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 48), d=st.integers(300, 3000), seed=st.integers(0, 99))
+def test_sketched_cosine_within_jl_tolerance(n, d, seed):
+    """Pairwise cosine through the r=256 sketch tracks the dense cosine
+    within JL error (~1/sqrt(r)) across fleet and model sizes: empirical
+    worst case over wide sweeps is mean ~0.05 / max ~0.23."""
+    df = make_defense(FedConfig(defense="foolsgold_sketch", seed=seed), d)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    u = _unit(x)
+    su = _unit(df.sketch(u))
+    err = np.abs(np.asarray(u @ u.T) - np.asarray(su @ su.T))
+    np.fill_diagonal(err, 0.0)
+    assert err.mean() < 0.1
+    assert err.max() < 0.45
+
+
+def test_sketch_preserves_replicas_exactly():
+    """Identical update vectors sketch to identical rows — a sybil clique's
+    cosine-1 structure survives the projection bit-exactly."""
+    df = make_defense(FedConfig(defense="foolsgold_sketch"), D)
+    row = jnp.asarray(np.random.default_rng(0).standard_normal((1, D)),
+                      jnp.float32)
+    s = df.sketch(jnp.tile(row, (4, 1)))
+    np.testing.assert_array_equal(np.asarray(s[0]), np.asarray(s[1]))
+
+
+def test_sketch_is_linear():
+    """sketch(a + b) == sketch(a) + sketch(b): accumulating sketched deltas
+    into the history equals sketching the accumulated history."""
+    df = make_defense(FedConfig(defense="foolsgold_sketch"), D)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((3, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, D)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(df.sketch(a + b)),
+        np.asarray(df.sketch(a) + df.sketch(b)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_sketch_deterministic_across_instances():
+    """Bucket/sign tables derive from the seed alone, so every shard (and
+    a re-built engine) projects identically."""
+    fed = FedConfig(defense="foolsgold_sketch", seed=3)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((2, D)),
+                    jnp.float32)
+    s1 = make_defense(fed, D).sketch(x)
+    s2 = make_defense(fed, D).sketch(x)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+# ---------------------------------------------------------------------------
+# cluster-aware weights
+# ---------------------------------------------------------------------------
+
+def test_cluster_weights_collapse_replica_clique():
+    """40 diverse honest rows (multiplicity ~1) + a 24-replica clique: the
+    clique drops below 0.1 weight, honest clients keep exactly 1."""
+    rng = np.random.default_rng(4)
+    honest = rng.standard_normal((40, 64)).astype(np.float32)
+    clique = np.tile(rng.standard_normal((1, 64)).astype(np.float32), (24, 1))
+    hist = jnp.asarray(np.concatenate([honest, clique]))
+    w = np.asarray(cluster_weights(hist, jnp.ones(64, bool)))
+    assert w[40:].max() < 0.1
+    np.testing.assert_allclose(w[:40], 1.0)
+
+
+def test_cluster_weights_neutral_on_uniform_clusters():
+    """A fleet that is nothing but same-sized natural clusters (every
+    client has a few near-duplicates) keeps uniform full weight — the
+    homogeneous-fleet fix in miniature."""
+    rng = np.random.default_rng(5)
+    protos = rng.standard_normal((8, 64)).astype(np.float32)
+    rows = np.repeat(protos, 4, axis=0)
+    rows += 0.01 * rng.standard_normal(rows.shape).astype(np.float32)
+    w = np.asarray(cluster_weights(jnp.asarray(rows), jnp.ones(32, bool)))
+    np.testing.assert_allclose(w, 1.0)
+
+
+def test_cluster_weights_ignore_inactive():
+    clique = jnp.ones((24, 16))
+    active = jnp.zeros(24, bool).at[:2].set(True)
+    w = np.asarray(cluster_weights(clique, active))
+    assert np.all(w[2:] == 0.0)  # inactive clients carry no weight
+    assert np.all(w[:2] > 0.9)  # a 2-clique is within the natural scale
+
+
+# ---------------------------------------------------------------------------
+# history decay (FedConfig.defense_history_decay)
+# ---------------------------------------------------------------------------
+
+def test_update_history_decay_forgets_old_rounds():
+    hist = jnp.full((3, 4), 8.0)
+    deltas = jnp.ones((3, 4))
+    active = jnp.ones(3, bool)
+    out = np.asarray(update_history(hist, deltas, active, decay=0.5))
+    np.testing.assert_allclose(out, 5.0)  # 0.5 * 8 + 1
+    legacy = np.asarray(update_history(hist, deltas, active))  # decay=1.0
+    np.testing.assert_allclose(legacy, 9.0)
+    # inactive clients decay too, but receive no new delta
+    part = np.asarray(update_history(
+        hist, deltas, jnp.array([True, False, False]), decay=0.5
+    ))
+    np.testing.assert_allclose(part[0], 5.0)
+    np.testing.assert_allclose(part[1:], 4.0)
+
+
+def test_update_history_decay_bounds_long_runs():
+    """Geometric decay caps the accumulated norm at delta / (1 - decay), so
+    arbitrarily long runs stay far from fp32 saturation (decay=1 grows
+    without bound)."""
+    hist = jnp.zeros((1, 2))
+    delta = jnp.ones((1, 2))
+    active = jnp.ones(1, bool)
+    for _ in range(200):
+        hist = update_history(hist, delta, active, decay=0.9)
+    assert float(np.abs(np.asarray(hist)).max()) < 10.0 + 1e-4
+
+
+def test_engine_threads_decay_through_config():
+    """The engine's carried history honors FedConfig.defense_history_decay."""
+    import jax
+
+    from repro.configs.fedar_mnist import fleet_fed, small_model
+    from repro.core.engine import FedAREngine
+    from repro.core.resources import TaskRequirement
+    from repro.data.federated import scaled_fleet
+
+    data = {
+        k: jnp.asarray(v)
+        for k, v in scaled_fleet(8, samples_per_client=40).items()
+    }
+    hists = {}
+    for decay in (1.0, 0.5):
+        fed = fleet_fed(8, local_epochs=1, defense="foolsgold_sketch",
+                        client_fraction=1.0, num_starved=0, num_poisoners=0,
+                        defense_history_decay=decay)
+        engine = FedAREngine(small_model(16), fed, TaskRequirement())
+        state, _ = engine.run(engine.init_state(), data, rounds=3)
+        hists[decay] = np.asarray(jax.device_get(state.fg_history))
+    # decayed history must be strictly smaller in norm than the legacy one
+    assert np.linalg.norm(hists[0.5]) < np.linalg.norm(hists[1.0])

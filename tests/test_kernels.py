@@ -7,6 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
+from repro.kernels.defense_sim import sketch_similarity
 from repro.kernels.fedavg_agg import fedavg_agg
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
@@ -108,6 +109,59 @@ def test_fedavg_agg_staleness_decay(N, D, block):
                       block_d=block)
     np.testing.assert_allclose(got0, ref.fedavg_agg_ref(deltas, w),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# defense similarity block product
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "M,Nf,K",
+    [(16, 128, 256), (8, 64, 256), (128, 128, 512), (16, 100, 200), (1, 7, 33)],
+)
+def test_sketch_similarity_sweep(M, Nf, K):
+    k = jax.random.PRNGKey(M * 31 + Nf)
+    a = jax.random.normal(k, (M, K))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (Nf, K))
+    got = sketch_similarity(a, b, interpret=True)
+    assert got.shape == (M, Nf) and got.dtype == jnp.float32
+    np.testing.assert_allclose(got, ref.sketch_similarity_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_similarity_blocked_contraction():
+    """K larger than block_k exercises the accumulating k-grid (the dense-
+    defense path where the contraction axis is the full model dim)."""
+    k = jax.random.PRNGKey(5)
+    a = jax.random.normal(k, (24, 1000))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (96, 1000))
+    got = sketch_similarity(a, b, interpret=True, block_n=128, block_k=256)
+    np.testing.assert_allclose(got, ref.sketch_similarity_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_similarity_padded_tails_do_not_leak():
+    """N and K both off the block grid: zero padding must be sliced away."""
+    k = jax.random.PRNGKey(6)
+    a = jax.random.normal(k, (5, 300))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (130, 300))
+    got = sketch_similarity(a, b, interpret=True, block_n=128, block_k=128)
+    assert got.shape == (5, 130)
+    np.testing.assert_allclose(got, ref.sketch_similarity_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_similarity_vmem_fit():
+    """Block fitting keeps the three fp32 tiles inside the VMEM budget even
+    for wide shard blocks."""
+    from repro.kernels.defense_sim import VMEM_BUDGET_BYTES, _fit_blocks
+
+    for m in (8, 128, 512):
+        bn, bk = _fit_blocks(m, 512, 512)
+        assert bn >= 128 and bk >= 128
+        assert 4 * (m * bk + bn * bk + m * bn) <= VMEM_BUDGET_BYTES or (
+            bn == 128 and bk == 128
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -39,8 +39,10 @@ def _data(n=N, samples=40):
     return _DATA_CACHE[(n, samples)]
 
 
-def _engines(aggregation, n=N, foolsgold=False):
+def _engines(aggregation, n=N, foolsgold=False, defense=None):
     kw = dict(local_epochs=1, foolsgold=foolsgold, aggregation=aggregation)
+    if defense is not None:
+        kw["defense"] = defense
     e1 = FedAREngine(small_model(32), fleet_fed(n, **kw), TaskRequirement())
     e8 = FedAREngine(
         small_model(32), fleet_fed(n, mesh_shape=SHARDS, **kw),
@@ -92,6 +94,32 @@ def test_sharded_foolsgold_gathered_product_matches():
     """FoolsGold's gathered block similarity == the dense (N, N) matrix."""
     e1, e8 = _engines("fedar", n=64, foolsgold=True)
     _assert_equivalent(e1, e8, _data(n=64))
+
+
+def test_sharded_sketch_defense_matches_single_device():
+    """The cluster-aware sketched defense: 8 client shards reproduce the
+    single-device sketch path to fp32 tolerance, and the cross-shard
+    defense payload is the (N, r) sketch — never the dense (N, D) history
+    (asserted via the gather_defense shape instrumentation)."""
+    n = 64
+    e1, e8 = _engines("fedar", n=n, defense="foolsgold_sketch")
+    _assert_equivalent(e1, e8, _data(n=n))
+    r, d = e8.fed.defense_sketch_dim, e8.dim
+    assert r < d
+    for comms in (e1.comms, e8.comms):
+        shapes = comms.defense_gather_shapes
+        assert shapes, "defense gather never traced"
+        assert all(s == (n, r) for s in shapes), shapes
+
+
+def test_sharded_dense_defense_gathers_full_history():
+    """Contrast fixture for the payload instrumentation: the dense strategy
+    really does ship (N, D) across the mesh — the O(N*D) footprint the
+    sketch variant removes."""
+    n = 64
+    _, e8 = _engines("fedar", n=n, foolsgold=True)
+    e8.run(e8.init_state(), _data(n=n), rounds=1)
+    assert (n, e8.dim) in e8.comms.defense_gather_shapes
 
 
 def test_sharded_server_api_unchanged():
