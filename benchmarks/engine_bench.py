@@ -12,13 +12,18 @@ before jax initializes), so one invocation records the 1-vs-k scaling curve.
 
 The ``defense`` axis re-runs the scan engine per robust-defense strategy
 (none vs dense foolsgold vs the sketched cluster-aware variant), pricing
-the O(N*D) dense similarity gather against the (N, r) sketch.
+the O(N*D) dense similarity gather against the (N, r) sketch.  The
+``scenario`` axis re-runs it per non-IID data scenario from the federated
+dataset registry (``repro/data/datasets.py``) at an equal per-client sample
+budget, pricing the masked ragged-shard path and the windowed drift
+schedule against the dense wrap-padded fleet (``quantity_skew`` rows also
+carry that scenario's Dirichlet-max padding width, its inherent cost).
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
-Emits ``BENCH_engine.json`` (rounds/sec per fleet size, per device count
-and per defense strategy) for the perf trajectory; also wired into
-``benchmarks.run``.
+Emits ``BENCH_engine.json`` (rounds/sec per fleet size, per device count,
+per defense strategy and per data scenario) for the perf trajectory; also
+wired into ``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ import jax.numpy as jnp
 from repro.configs.fedar_mnist import fleet_fed, small_model
 from repro.core.engine import FedAREngine
 from repro.core.resources import TaskRequirement
+from repro.data.datasets import make_federated
 from repro.data.federated import scaled_fleet
 
 FLEET_SIZES = (12, 128, 512, 2048)
@@ -44,17 +50,28 @@ DEVICE_COUNTS = (1, 8)
 DEFENSES = ("none", "foolsgold", "foolsgold_sketch")
 DEFENSE_SIZES = (128, 512)
 QUICK_DEFENSE_SIZES = (128,)
+SCENARIOS = ("dense", "iid", "label_skew", "quantity_skew", "robot_drift")
+SCENARIO_SIZES = (128, 512)
+QUICK_SCENARIO_SIZES = (128,)
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 
 
-def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none"):
+def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none",
+          scenario: str | None = None):
     fed = fleet_fed(n, local_epochs=1, local_batch_size=20, defense=defense,
                     mesh_shape=mesh_shape)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
-    data = {
-        k: jnp.asarray(v)
-        for k, v in scaled_fleet(n, samples_per_client=SAMPLES).items()
-    }
+    if scenario is None or scenario == "dense":
+        raw = scaled_fleet(n, samples_per_client=SAMPLES)
+    else:
+        # same per-client sample budget as the dense baseline.  iid /
+        # label_skew / robot_drift then isolate mask/schedule overhead;
+        # quantity_skew additionally pays for its Dirichlet-max padded
+        # width — an inherent engine cost of that scenario, not mask math
+        raw = make_federated(
+            "digits", n, scenario=scenario, samples_per_client=SAMPLES
+        ).arrays()
+    data = {k: jnp.asarray(v) for k, v in raw.items()}
     return engine, data
 
 
@@ -123,6 +140,18 @@ def bench_defense(quick: bool = False) -> dict:
     return out
 
 
+def bench_scenario(quick: bool = False) -> dict:
+    """rounds/sec of the scan engine per data scenario: the dense wrap-
+    padded fleet vs the masked ragged shards vs the windowed drift path."""
+    out = {}
+    for n in QUICK_SCENARIO_SIZES if quick else SCENARIO_SIZES:
+        out[str(n)] = {}
+        for scenario in SCENARIOS:
+            engine, data = _make(n, scenario=scenario)
+            out[str(n)][scenario] = 1.0 / _time_scan(engine, data, rounds=4)
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -147,13 +176,15 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     return result
 
 
-def write_json(summary, devices=None, defense=None,
+def write_json(summary, devices=None, defense=None, scenario=None,
                path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
         payload["sharded_rounds_per_sec_by_devices"] = devices
     if defense is not None:
         payload["defense_rounds_per_sec"] = defense
+    if scenario is not None:
+        payload["scenario_rounds_per_sec"] = scenario
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -176,7 +207,8 @@ def main() -> None:
     rows, summary = bench(quick=quick)
     devices = bench_devices(quick=quick, counts=_parse_counts(argv))
     defense = bench_defense(quick=quick)
-    write_json(summary, devices, defense)
+    scenario = bench_scenario(quick=quick)
+    write_json(summary, devices, defense, scenario)
     for k, per_n in devices.items():
         for n, rps in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / rps, 1),
@@ -184,6 +216,10 @@ def main() -> None:
     for n, per_d in defense.items():
         for d, rps in per_d.items():
             rows.append((f"engine_scan_N{n}_{d}", round(1e6 / rps, 1),
+                         round(rps, 2)))
+    for n, per_s in scenario.items():
+        for s, rps in per_s.items():
+            rows.append((f"engine_scan_N{n}_data_{s}", round(1e6 / rps, 1),
                          round(rps, 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

@@ -25,8 +25,9 @@ def main() -> None:
     # mesh-sharded scaling runs in worker processes (device flag precedes jax)
     engine_devices = engine_bench.bench_devices(quick=quick)
     engine_defense = engine_bench.bench_defense(quick=quick)
-    engine_bench.write_json(engine_summary, engine_devices,
-                            engine_defense)  # BENCH_engine.json
+    engine_scenario = engine_bench.bench_scenario(quick=quick)
+    engine_bench.write_json(engine_summary, engine_devices, engine_defense,
+                            engine_scenario)  # BENCH_engine.json
     rows += engine_rows
     rows += kernels_bench.bench()
     rows += roofline.rows()

@@ -11,6 +11,10 @@ model).  There the dense statistic misfires on honest look-alikes, so the
 default strategy becomes the cluster-aware ``foolsgold_sketch``
 (``--defense`` overrides).  ``--devices k`` runs the round loop sharded
 over k client shards; the defense then gathers only the (N, r) sketch.
+``--dataset`` swaps the sample pool the fleets draw from: the default
+deterministic synthetic digits, or real ``mnist`` / ``emnist`` IDX files
+from the local cache dir (offline synthetic fallback when uncached — the
+attack geometry is identical either way).
 
 Run:  PYTHONPATH=src python examples/poisoning_defense.py
       PYTHONPATH=src python examples/poisoning_defense.py --clients 128
@@ -33,6 +37,13 @@ def main():
                          "robots, foolsgold_sketch at engine scale)")
     ap.add_argument("--devices", type=int, default=1,
                     help="client shards; >1 runs the mesh-sharded engine")
+    ap.add_argument("--dataset", default="synthetic",
+                    choices=["synthetic", "mnist", "emnist"],
+                    help="sample pool for the fleets (cached IDX files or "
+                         "the deterministic offline fallback)")
+    ap.add_argument("--cache_dir", default=None,
+                    help="IDX cache dir for mnist/emnist (default: "
+                         "$FEDAR_DATA_DIR or ~/.cache/fedar)")
     args = ap.parse_args()
 
     if args.clients != 12 and args.clients < 64:
@@ -60,10 +71,20 @@ def main():
     from repro.core.fedar import FedARServer
     from repro.core.resources import TaskRequirement
     from repro.data.federated import sybil_fleet, table2_fleet
-    from repro.data.synthetic import make_digits
+    from repro.data.sources import eval_source, get_source
 
     paper_scale = args.clients == 12
     mesh = args.devices if args.devices > 1 else None
+    source = get_source(args.dataset, cache_dir=args.cache_dir)
+    if source.fallback:
+        print(f"[data] {args.dataset}: no IDX files cached — deterministic "
+              "synthetic fallback")
+    # held-out eval split, loaded once and shared by both runs
+    eval_src, warn = eval_source(args.dataset, source.fallback,
+                                 cache_dir=args.cache_dir)
+    if warn:
+        print(warn)
+    ex, ey = eval_src.sample(500, seed=99)
 
     def run(defense: str):
         if paper_scale:
@@ -73,7 +94,7 @@ def main():
                 mesh_shape=mesh,
             )
             data = table2_fleet(samples_per_client=args.samples,
-                                flip_frac=0.8)
+                                flip_frac=0.8, source=source)
             sybils = np.zeros(12, bool)
             sybils[10:] = True
         else:
@@ -85,10 +106,10 @@ def main():
                 mesh_shape=mesh,
             )
             data, sybils = sybil_fleet(args.clients, n_syb,
-                                       samples_per_client=args.samples)
+                                       samples_per_client=args.samples,
+                                       source=source)
         srv = FedARServer(MnistConfig(), fed, TaskRequirement())
         data = {k: jnp.asarray(v) for k, v in data.items()}
-        ex, ey = make_digits(500, seed=99)
         hist = srv.run(data, rounds=args.rounds, eval_set=(ex, ey))
         fgw = None
         if defense != "none" and not paper_scale:

@@ -2,14 +2,21 @@
 
 All rounds execute inside one jitted ``lax.scan`` (see
 ``repro/core/engine.py``); pass ``--clients N`` to scale the fleet past the
-paper's 12 robots (Table II profiles are tiled, stragglers/poisoners keep the
-paper's 1/6 fractions).  ``--devices k`` shards the engine's round loop over
-k client shards (``shard_map`` over a ``clients`` mesh); on a CPU-only host
-it forces k fake host devices via XLA_FLAGS, which is why jax is imported
-only after argument parsing.
+paper's 12 robots.  ``--dataset`` picks a fleet from the federated dataset
+registry (``repro/data/datasets.py``): ``auto`` keeps the legacy behavior
+(Table II at 12 robots, the tiled ``scaled`` fleet beyond), while ``mnist``
+/ ``emnist`` / ``digits`` run a sample pool — real IDX files from the local
+cache dir, or the deterministic offline synthetic fallback, never the
+network — through a named non-IID ``--scenario`` (``iid`` | ``label_skew``
+| ``quantity_skew`` | ``robot_drift``).  ``--devices k`` shards the engine's
+round loop over k client shards (``shard_map`` over a ``clients`` mesh); on
+a CPU-only host it forces k fake host devices via XLA_FLAGS, which is why
+jax is imported only after argument parsing.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--clients 128]
       PYTHONPATH=src python examples/quickstart.py --clients 128 --devices 8
+      PYTHONPATH=src python examples/quickstart.py --clients 512 --devices 8 \
+          --dataset emnist --scenario label_skew
 """
 import argparse
 import os
@@ -21,6 +28,25 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--devices", type=int, default=1,
                     help="client shards; >1 runs the mesh-sharded engine")
+    ap.add_argument("--dataset", default="auto",
+                    choices=["auto", "table2", "scaled", "digits", "mnist",
+                             "emnist"],
+                    help="fleet builder (auto: table2 at 12 robots, scaled "
+                         "beyond); mnist/emnist load cached IDX files or "
+                         "fall back to deterministic synthetic digits")
+    ap.add_argument("--scenario", default=None,
+                    choices=["iid", "label_skew", "quantity_skew",
+                             "robot_drift"],
+                    help="non-IID split for the pool datasets "
+                         "(digits/mnist/emnist); default label_skew")
+    ap.add_argument("--samples", type=int, default=300,
+                    help="samples per client")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Dirichlet concentration for the skew scenarios; "
+                         "default 0.5")
+    ap.add_argument("--cache_dir", default=None,
+                    help="IDX cache dir for mnist/emnist (default: "
+                         "$FEDAR_DATA_DIR or ~/.cache/fedar)")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -39,8 +65,19 @@ def main():
     from repro.configs.fedar_mnist import MnistConfig, fleet_fed
     from repro.core.fedar import FedARServer
     from repro.core.resources import TaskRequirement
-    from repro.data.federated import scaled_fleet, table2_fleet
-    from repro.data.synthetic import make_digits
+    from repro.data.datasets import make_federated
+    from repro.data.sources import eval_source, get_source
+
+    name = args.dataset
+    if name == "auto":
+        name = "table2" if args.clients == 12 else "scaled"
+    if name not in ("digits", "mnist", "emnist") and (
+        args.scenario is not None or args.alpha is not None
+    ):
+        # fail loudly rather than silently dropping the scenario on the
+        # floor: the legacy fleets (table2/scaled) have no scenario axis
+        ap.error(f"--scenario/--alpha apply only to the pool datasets "
+                 f"(digits/mnist/emnist), not to dataset={name!r}")
 
     # the paper's B=20, E=5 setting, at any fleet size.  The paper's 12
     # heterogeneous robots take the dense FoolsGold statistic; the tiled
@@ -58,12 +95,31 @@ def main():
         print(f"mesh: {server.mesh.devices.size} client shards "
               f"x {args.clients // server.mesh.devices.size} clients")
 
-    if args.clients == 12:
-        data = table2_fleet(samples_per_client=300)  # Table II fleet
-    else:
-        data = scaled_fleet(args.clients, samples_per_client=300)
-    data = {k: jnp.asarray(v) for k, v in data.items()}
-    eval_x, eval_y = make_digits(500, seed=99)
+    kw = {}
+    if name in ("digits", "mnist", "emnist"):
+        kw["scenario"] = args.scenario or "label_skew"
+        if kw["scenario"] == "iid":
+            if args.alpha is not None:
+                ap.error("--alpha applies to the skewed scenarios "
+                         "(label_skew/quantity_skew/robot_drift), not iid")
+        else:
+            kw["alpha"] = 0.5 if args.alpha is None else args.alpha
+    ds = make_federated(name, args.clients, samples_per_client=args.samples,
+                        cache_dir=args.cache_dir, **kw)
+    if ds.fallback:
+        print(f"[data] {name}: no IDX files in the cache dir — using the "
+              "deterministic offline synthetic fallback")
+    print(f"[data] dataset={ds.name} scenario={ds.scenario or '-'} "
+          f"shards={ds.x.shape} mean n_u={ds.sizes.mean():.0f}")
+    data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
+    # evaluate on the held-out split of the same source (test IDX files when
+    # cached, the synthetic generator otherwise)
+    eval_name = name if name in ("mnist", "emnist") else "synthetic"
+    eval_src, warn = eval_source(eval_name, ds.fallback,
+                                 cache_dir=args.cache_dir)
+    if warn:
+        print(warn)
+    eval_x, eval_y = eval_src.sample(500, seed=99)
 
     # one scan = all rounds on-device; history comes back stacked
     hist = server.run(data, rounds=args.rounds, eval_set=(eval_x, eval_y))

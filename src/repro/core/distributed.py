@@ -148,6 +148,12 @@ def client_spec(fed: FedConfig) -> P:
     return P(fed.client_axis)
 
 
+def window_client_spec(fed: FedConfig) -> P:
+    """PartitionSpec for round-windowed client tensors (W, N, ...) — the
+    drift schedule's ``round_mask`` — sharding the client axis (axis 1)."""
+    return P(None, fed.client_axis)
+
+
 def replicated_spec() -> P:
     """PartitionSpec for replicated state (params, (N,) bookkeeping)."""
     return P()

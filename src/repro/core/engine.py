@@ -71,6 +71,7 @@ from repro.core.distributed import (
     client_mesh,
     client_spec,
     replicated_spec,
+    window_client_spec,
 )
 from repro.core.resources import (
     ResourceState,
@@ -205,19 +206,29 @@ class FedAREngine:
             round_idx=Pr,
         )
 
-    def data_specs(self) -> dict:
+    def data_specs(self, data=None) -> dict:
+        """Specs for the engine's data dict.  The optional ragged-shard keys
+        (``mask`` (N, n), ``round_mask`` (W, N, n) — see ``data/datasets``)
+        shard their client axis like the sample arrays; pass ``data`` so the
+        spec pytree matches the dict actually fed to the shard_map."""
         Pc, Pr = client_spec(self.fed), replicated_spec()
-        return {"x": Pc, "y": Pc, "sizes": Pr, "activations": Pc}
+        specs = {"x": Pc, "y": Pc, "sizes": Pr, "activations": Pc}
+        if data is not None:
+            if "mask" in data:
+                specs["mask"] = Pc
+            if "round_mask" in data:
+                specs["round_mask"] = window_client_spec(self.fed)
+        return specs
 
     def _round_out_specs(self) -> RoundOutputs:
         Pr = replicated_spec()
         return RoundOutputs(Pr, Pr, Pr, Pr, Pr, Pr)
 
-    def _in_specs(self, eval_set, force_straggler):
+    def _in_specs(self, data, eval_set, force_straggler):
         Pr = replicated_spec()
         return (
             self.state_specs(),
-            self.data_specs(),
+            self.data_specs(data),
             None if eval_set is None else (Pr, Pr),
             None if force_straggler is None else Pr,
         )
@@ -226,7 +237,11 @@ class FedAREngine:
     def _round_step(self, state: EngineState, data, eval_set, force_straggler):
         """One communication round, fully traceable.  ``data``: dict with
         stacked per-client arrays x (N, n, 784), y (N, n), sizes (N,),
-        activations (N,) int32 (0=relu, 1=softmax per Table II).
+        activations (N,) int32 (0=relu, 1=softmax per Table II), plus the
+        optional ragged-shard keys from ``data/datasets``: ``mask`` (N, n)
+        bool marks the real (non-padding) samples, and ``round_mask``
+        (W, N, n) bool is a drift schedule — round t trains on window
+        ``t mod W`` (``sizes`` stays the static n_u aggregation weight).
 
         Under mesh comms this body executes per-shard: ``data["x"/"y"/
         "activations"]``, ``state.fg_history`` and ``state.pending_delta``
@@ -242,10 +257,23 @@ class FedAREngine:
             k_sel, state.trust, state.resources, self.req, fed
         )
 
+        # --- ragged / drifting shards: resolve this round's sample mask
+        sample_mask = data.get("mask")
+        if "round_mask" in data:
+            rm = data["round_mask"]
+            active_window = jax.lax.dynamic_index_in_dim(
+                rm, jnp.remainder(state.round_idx, rm.shape[0]), 0,
+                keepdims=False,
+            )
+            sample_mask = (
+                active_window if sample_mask is None
+                else sample_mask & active_window
+            )
+
         # --- lines 16-21 (ClientUpdate): local SGD on every client, vmapped
         # over this shard's client block; non-participants are masked out of
         # the aggregate
-        def client_update(p_flat, x, y, act):
+        def client_update(p_flat, x, y, act, m=None):
             p = unflatten(p_flat, self.template)
             new = local_sgd(
                 p,
@@ -255,13 +283,19 @@ class FedAREngine:
                 batch_size=fed.local_batch_size,
                 epochs=fed.local_epochs,
                 activation=act,
+                sample_mask=m,
             )
             return flatten(new)
 
         g_flat = state.params
-        locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
-            g_flat, data["x"], data["y"], data["activations"]
-        )
+        if sample_mask is None:
+            locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
+                g_flat, data["x"], data["y"], data["activations"]
+            )
+        else:
+            locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
+                g_flat, data["x"], data["y"], data["activations"], sample_mask
+            )
         deltas = locals_flat - g_flat[None, :]  # (N_loc, D)
 
         # --- virtual time: latency per client, straggler = late vs timeout
@@ -439,7 +473,7 @@ class FedAREngine:
         return shard_map(
             fn,
             mesh=self.mesh,
-            in_specs=self._in_specs(eval_set, force_straggler),
+            in_specs=self._in_specs(data, eval_set, force_straggler),
             out_specs=(self.state_specs(), self._round_out_specs()),
             check_rep=False,
         )(state, data, eval_set, force_straggler)

@@ -1,0 +1,230 @@
+"""Federated dataset subsystem: one entry point over every fleet builder.
+
+``make_federated(name, num_clients, **knobs)`` resolves a builder from the
+registry and returns a :class:`FederatedDataset` — client-indexed ``(x, y)``
+shards plus per-client metadata, ready for the scan engine (and mesh-
+shardable: ``FedAREngine.data_specs`` shards every client-indexed array into
+``N / mesh_shape`` blocks).
+
+Builders:
+
+  ``table2``   -- the paper's exact 12-robot fleet (Table II).
+  ``scaled``   -- Table II tiled to any fleet size (engine-scale runs).
+  ``sybil``    -- honest tiled fleet + a replica sybil clique (the defense
+                  demo's threat model).  Knob: ``num_sybils`` (default N/4).
+  ``digits`` / ``mnist`` / ``emnist``
+               -- pool datasets: draw a sample pool from ``data/sources.py``
+                  (real IDX files from the local cache, or the deterministic
+                  offline fallback — never the network) and split it with a
+                  named non-IID scenario from ``data/scenarios.py``
+                  (``iid`` / ``label_skew`` / ``quantity_skew`` /
+                  ``robot_drift``).
+
+Pool datasets are ragged — clients hold different sample counts — so shards
+are zero-padded to a rectangle and carry a ``mask`` array; the engine
+excludes padded samples from local SGD via the mask (``sizes`` holds the
+true n_u for aggregation weighting).  ``robot_drift`` additionally carries a
+``round_mask`` (windows, N, n) schedule: round t trains on window
+``t mod windows``, so per-client class mixtures rotate over rounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.data.federated import scaled_fleet, sybil_fleet, table2_fleet
+from repro.data.scenarios import make_scenario
+from repro.data.sources import ArraySource, get_source
+
+
+@dataclass
+class FederatedDataset:
+    """Client-indexed shards + metadata.  ``arrays()`` yields the engine's
+    data dict; optional ``mask`` / ``round_mask`` ride along only when set,
+    so legacy (densely wrap-padded) fleets keep their exact dict layout."""
+
+    name: str
+    x: np.ndarray  # (N, n, 784) float32
+    y: np.ndarray  # (N, n) int32
+    sizes: np.ndarray  # (N,) float32 true per-client sample counts
+    activations: np.ndarray  # (N,) int32 0=relu 1=softmax
+    scenario: Optional[str] = None
+    mask: Optional[np.ndarray] = None  # (N, n) bool valid-sample mask
+    round_mask: Optional[np.ndarray] = None  # (W, N, n) bool drift schedule
+    poisoners: Optional[np.ndarray] = None  # (N,) bool
+    fallback: bool = False  # offline fallback pool stood in for real data
+    num_classes: int = 10
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def samples(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def windows(self) -> int:
+        return 0 if self.round_mask is None else self.round_mask.shape[0]
+
+    def arrays(self) -> dict:
+        out = {
+            "x": self.x,
+            "y": self.y,
+            "sizes": self.sizes,
+            "activations": self.activations,
+        }
+        if self.mask is not None:
+            out["mask"] = self.mask
+        if self.round_mask is not None:
+            out["round_mask"] = self.round_mask
+        return out
+
+
+BUILDERS: Dict[str, Callable] = {}
+
+
+def register_builder(name: str):
+    def deco(fn):
+        BUILDERS[name] = fn
+        return fn
+
+    return deco
+
+
+def make_federated(name: str, num_clients: int = 12, **knobs
+                   ) -> FederatedDataset:
+    """Build a named federated dataset.  See module docstring for the
+    registry; unknown knobs raise from the builder (no silent typos)."""
+    try:
+        builder = BUILDERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown federated dataset {name!r}; registered: "
+            f"{sorted(BUILDERS)}"
+        ) from None
+    return builder(num_clients, **knobs)
+
+
+# ---------------------------------------------------------------- legacy
+# fleet builders (wrap-padded, no mask — bit-identical to calling the
+# underlying constructors directly)
+
+def _poison_mask(num_clients: int, poisoners) -> np.ndarray:
+    mask = np.zeros(num_clients, bool)
+    mask[list(poisoners)] = True
+    return mask
+
+
+@register_builder("table2")
+def _table2(num_clients, *, seed=0, poisoners=(10, 11), flip_frac=0.6,
+            samples_per_client=None, source="synthetic", cache_dir=None):
+    if num_clients != 12:
+        raise ValueError(
+            f"table2 is the paper's 12-robot fleet, got num_clients="
+            f"{num_clients} (use 'scaled' for other sizes)"
+        )
+    src = get_source(source, cache_dir=cache_dir)
+    data = table2_fleet(seed=seed, poisoners=poisoners, flip_frac=flip_frac,
+                        samples_per_client=samples_per_client, source=src)
+    return FederatedDataset(
+        name="table2", **data, poisoners=_poison_mask(12, poisoners),
+        fallback=src.fallback, meta={"source": src.name},
+    )
+
+
+@register_builder("scaled")
+def _scaled(num_clients, *, seed=0, num_poisoners=None, flip_frac=0.6,
+            samples_per_client=200, source="synthetic", cache_dir=None):
+    src = get_source(source, cache_dir=cache_dir)
+    data, poison = scaled_fleet(
+        num_clients, seed=seed, num_poisoners=num_poisoners,
+        flip_frac=flip_frac, samples_per_client=samples_per_client,
+        return_poisoners=True, source=src,
+    )
+    return FederatedDataset(
+        name="scaled", **data, poisoners=poison, fallback=src.fallback,
+        meta={"source": src.name},
+    )
+
+
+@register_builder("sybil")
+def _sybil(num_clients, *, num_sybils=None, seed=0, samples_per_client=200,
+           flip_frac=1.0, target_shift=1, source="synthetic", cache_dir=None):
+    src = get_source(source, cache_dir=cache_dir)
+    if num_sybils is None:
+        num_sybils = num_clients // 4
+    data, sybils = sybil_fleet(
+        num_clients, num_sybils, seed=seed,
+        samples_per_client=samples_per_client, flip_frac=flip_frac,
+        target_shift=target_shift, source=src,
+    )
+    return FederatedDataset(
+        name="sybil", **data, poisoners=sybils, fallback=src.fallback,
+        meta={"source": src.name, "num_sybils": num_sybils},
+    )
+
+
+# ---------------------------------------------------------------- pool
+# datasets: sample pool (real or fallback) + non-IID scenario plan
+
+def _assemble(name, scenario, px, py, plan, num_clients, *, seed,
+              fallback, num_classes, meta):
+    """Turn a ragged ScenarioPlan over pool arrays into rectangular padded
+    shards with validity masks (and the drift round_mask schedule)."""
+    counts = [len(ci) for ci in plan.client_indices]
+    n_max = max(1, max(counts, default=0))
+    dim = px.shape[1]
+    x = np.zeros((num_clients, n_max, dim), np.float32)
+    y = np.zeros((num_clients, n_max), np.int32)
+    mask = np.zeros((num_clients, n_max), bool)
+    for i, ci in enumerate(plan.client_indices):
+        x[i, : len(ci)] = px[ci]
+        y[i, : len(ci)] = py[ci]
+        mask[i, : len(ci)] = True
+    round_mask = None
+    if plan.window_indices is not None:
+        windows = len(plan.window_indices[0])
+        round_mask = np.zeros((windows, num_clients, n_max), bool)
+        for i, wins in enumerate(plan.window_indices):
+            off = 0
+            for w, win in enumerate(wins):  # window-major client layout
+                round_mask[w, i, off : off + len(win)] = True
+                off += len(win)
+    # Table II assigns softmax/relu "activations" randomly per robot
+    rng = np.random.default_rng(seed + 13)
+    activations = rng.integers(0, 2, num_clients).astype(np.int32)
+    return FederatedDataset(
+        name=name, scenario=scenario, x=x, y=y,
+        sizes=np.asarray(counts, np.float32), activations=activations,
+        mask=mask, round_mask=round_mask, fallback=fallback,
+        num_classes=num_classes, meta=meta,
+    )
+
+
+def _pool_builder(dataset: str):
+    def build(num_clients, *, scenario="label_skew", samples_per_client=200,
+              seed=0, cache_dir=None, **scenario_knobs):
+        src = get_source(dataset, cache_dir=cache_dir)
+        if isinstance(src, ArraySource):
+            px, py = src.x, src.y
+        else:
+            # fallback / synthetic pool, sized to the fleet's demand
+            pool_n = max(num_clients * (samples_per_client or 200), 2048)
+            px, py = src.sample(pool_n, seed=seed * 7919 + 11)
+        plan = make_scenario(scenario, py, num_clients, samples_per_client,
+                             seed=seed, **scenario_knobs)
+        return _assemble(
+            dataset, scenario, px, py, plan, num_clients, seed=seed,
+            fallback=src.fallback, num_classes=src.num_classes,
+            meta={"source": src.name, "pool_size": len(py), **scenario_knobs},
+        )
+
+    return build
+
+
+for _name in ("digits", "mnist", "emnist"):
+    register_builder(_name)(_pool_builder(_name))

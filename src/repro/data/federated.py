@@ -7,13 +7,19 @@ poisoners label-flipping.
 
 ``dirichlet_partition`` is the standard non-IID splitter for cohort-scale
 experiments (the paper stresses FL works with non-IID data).
+
+Every fleet builder takes an optional ``source`` (``data/sources.py``): the
+default synthetic generator keeps the seed-exact numerics; passing a real
+MNIST/EMNIST source swaps the sample pool without touching the fleet layout.
+The one-stop entry point over these builders plus the pool/scenario path is
+``data.datasets.make_federated``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.resources import POISON_FRAC
-from repro.data.synthetic import make_digits
+from repro.data.sources import DigitSource, SyntheticSource
 
 # Table II: (labels, activation, n_samples); softmax=1, relu=0
 TABLE_II = [
@@ -33,17 +39,20 @@ TABLE_II = [
 
 
 def _build_fleet(profiles, poisoners, *, flip_frac: float, seed: int,
-                 samples_per_client: int | None):
+                 samples_per_client: int | None,
+                 source: DigitSource | None = None):
     """Stack per-client digit shards for a list of (labels, act, n) profiles.
     Arrays are padded to the max sample count with wrap-around so vmap over
-    clients is rectangular; ``sizes`` holds n_u."""
+    clients is rectangular; ``sizes`` holds n_u.  ``source`` picks the sample
+    pool (default: the synthetic generator, seed-exact with the seed repro)."""
+    src = source if source is not None else SyntheticSource()
     xs, ys, sizes, acts = [], [], [], []
     n_max = 0
     for i, (labels, act, n) in enumerate(profiles):
         if samples_per_client:
             n = min(n, samples_per_client)
         flip = flip_frac if i in poisoners else 0.0
-        x, y = make_digits(n, labels, seed=seed * 101 + i, flip_frac=flip)
+        x, y = src.sample(n, labels, seed=seed * 101 + i, flip_frac=flip)
         xs.append(x)
         ys.append(y)
         sizes.append(n)
@@ -65,21 +74,24 @@ def _build_fleet(profiles, poisoners, *, flip_frac: float, seed: int,
 
 
 def table2_fleet(*, seed: int = 0, poisoners=(10, 11), flip_frac: float = 0.6,
-                 samples_per_client: int | None = None):
+                 samples_per_client: int | None = None,
+                 source: DigitSource | None = None):
     """The paper's exact 12-robot fleet (Table II).
 
     ``poisoners``: 0-indexed robots whose labels are flipped (the paper uses
     two poisoning robots).  ``samples_per_client`` overrides Table II counts
     (useful to shrink tests)."""
     return _build_fleet(TABLE_II, set(poisoners), flip_frac=flip_frac,
-                        seed=seed, samples_per_client=samples_per_client)
+                        seed=seed, samples_per_client=samples_per_client,
+                        source=source)
 
 
 def scaled_fleet(num_clients: int, *, seed: int = 0,
                  num_poisoners: int | None = None,
                  poison_frac: float = POISON_FRAC, flip_frac: float = 0.6,
                  samples_per_client: int | None = 200,
-                 return_poisoners: bool = False):
+                 return_poisoners: bool = False,
+                 source: DigitSource | None = None):
     """Table II tiled out to ``num_clients`` robots for engine-scale runs.
 
     Client ``i`` inherits profile ``TABLE_II[i % 12]`` (label subset,
@@ -97,7 +109,7 @@ def scaled_fleet(num_clients: int, *, seed: int = 0,
     profiles = [TABLE_II[i % len(TABLE_II)] for i in range(num_clients)]
     poisoners = set(range(num_clients - num_poisoners, num_clients))
     data = _build_fleet(profiles, poisoners, flip_frac=flip_frac, seed=seed,
-                        samples_per_client=samples_per_client)
+                        samples_per_client=samples_per_client, source=source)
     if return_poisoners:
         mask = np.zeros(num_clients, bool)
         mask[list(poisoners)] = True
@@ -107,7 +119,7 @@ def scaled_fleet(num_clients: int, *, seed: int = 0,
 
 def sybil_fleet(num_clients: int, num_sybils: int, *, seed: int = 0,
                 samples_per_client: int = 200, flip_frac: float = 1.0,
-                target_shift: int = 1):
+                target_shift: int = 1, source: DigitSource | None = None):
     """Honest tiled fleet + a replica sybil clique (the FoolsGold threat
     model of Fung et al.): the last ``num_sybils`` clients all hold the SAME
     poisoned shard — one dataset with labels shifted ``y -> (y +
@@ -118,14 +130,15 @@ def sybil_fleet(num_clients: int, num_sybils: int, *, seed: int = 0,
     should, fire on them — that is the deviation ban's job.)
 
     Returns (data dict, (num_clients,) bool sybil mask)."""
+    src = source if source is not None else SyntheticSource()
     profiles = [TABLE_II[i % len(TABLE_II)] for i in range(num_clients)]
     data = _build_fleet(profiles, set(), flip_frac=0.0, seed=seed,
-                        samples_per_client=samples_per_client)
+                        samples_per_client=samples_per_client, source=src)
     mask = np.zeros(num_clients, bool)
     if num_sybils:
         mask[num_clients - num_sybils:] = True
         n = data["x"].shape[1]
-        x, y = make_digits(n, seed=seed * 101 + 999)
+        x, y = src.sample(n, seed=seed * 101 + 999)
         k = int(n * flip_frac)
         idx = np.random.default_rng(seed + 7).choice(n, k, replace=False)
         y[idx] = (y[idx] + target_shift) % 10
@@ -137,15 +150,48 @@ def sybil_fleet(num_clients: int, num_sybils: int, *, seed: int = 0,
     return data, mask
 
 
+def safe_dirichlet(rng, alpha: float, n: int, size=None) -> np.ndarray:
+    """Dirichlet(alpha) draw(s) guarded against alpha underflow: a row whose
+    gamma draws underflow to all-zero (NaN after normalization) becomes the
+    alpha -> 0 limit — all mass on one uniformly drawn entry — instead of
+    propagating NaNs into index arithmetic.  The RNG stream matches a bare
+    ``rng.dirichlet`` call exactly when no row underflows."""
+    props = rng.dirichlet([alpha] * n, size=size)
+    rows = props.reshape(-1, n)  # contiguous view: writes land in props
+    for i in np.where(~np.isfinite(rows).all(axis=1))[0]:
+        rows[i] = 0.0
+        rows[i, rng.integers(n)] = 1.0
+    return props
+
+
 def dirichlet_partition(x, y, num_clients: int, alpha: float = 0.5, seed: int = 0):
-    """Non-IID label-dirichlet split.  Returns list of index arrays."""
+    """Non-IID label-dirichlet split.  Returns list of index arrays.
+
+    Degenerate inputs are guarded instead of silently producing empty or
+    garbage shards: ``num_clients`` must be a positive int no larger than the
+    sample count, ``alpha`` must be a positive finite float, and an alpha so
+    tiny that the underlying gamma draws underflow to an all-zero (NaN after
+    normalization) proportion vector falls back to a one-hot assignment —
+    the correct alpha -> 0 limit — rather than casting NaNs to ints."""
+    y = np.asarray(y)
+    if num_clients < 1:
+        raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+    if not np.isfinite(alpha) or alpha <= 0:
+        raise ValueError(f"alpha must be a positive finite float, got {alpha}")
+    if y.size == 0:
+        raise ValueError("cannot partition an empty label array")
+    if num_clients > y.size:
+        raise ValueError(
+            f"num_clients={num_clients} exceeds the {y.size} samples — "
+            "every split would contain empty shards"
+        )
     rng = np.random.default_rng(seed)
     classes = np.unique(y)
     idx_by_class = [np.where(y == c)[0] for c in classes]
     client_idx = [[] for _ in range(num_clients)]
     for idxs in idx_by_class:
         rng.shuffle(idxs)
-        props = rng.dirichlet([alpha] * num_clients)
+        props = safe_dirichlet(rng, alpha, num_clients)
         cuts = (np.cumsum(props) * len(idxs)).astype(int)[:-1]
         for cid, part in enumerate(np.split(idxs, cuts)):
             client_idx[cid].extend(part.tolist())

@@ -34,6 +34,19 @@ def digit_prototypes(seed: int = 1234) -> np.ndarray:
     return np.stack(protos)
 
 
+def flip_labels(rng, y, flip_frac: float, num_classes: int = 10):
+    """Poison ``flip_frac`` of ``y`` in place with random relabels (the
+    paper's attack: "deliberately modified some training samples").  The one
+    implementation shared by every sample source, so synthetic and real-data
+    attack geometries cannot drift apart.  Consumes ``rng.choice`` then
+    ``rng.integers`` — callers relying on seed-exact streams must not
+    reorder."""
+    k = int(len(y) * flip_frac)
+    idx = rng.choice(len(y), k, replace=False)
+    y[idx] = (y[idx] + rng.integers(1, num_classes, k)) % num_classes
+    return y
+
+
 def make_digits(
     n: int, classes=None, *, seed: int = 0, noise: float = 0.35, flip_frac: float = 0.0
 ):
@@ -49,9 +62,7 @@ def make_digits(
     x += rng.uniform(-0.1, 0.1, (n, 1, 1))
     x = np.clip(x, 0, 1).reshape(n, 784).astype(np.float32)
     if flip_frac > 0:
-        k = int(n * flip_frac)
-        idx = rng.choice(n, k, replace=False)
-        y[idx] = (y[idx] + rng.integers(1, 10, k)) % 10
+        flip_labels(rng, y, flip_frac)
     return x, y.astype(np.int32)
 
 

@@ -35,11 +35,19 @@ def mnist_logits(params, x, activation=0):
     return h @ params["w2"] + params["b2"]
 
 
-def mnist_loss(params, x, y, activation=0):
+def mnist_loss(params, x, y, activation=0, sample_mask=None):
+    """Cross-entropy; ``sample_mask`` (optional (n,) bool/float) excludes
+    padded samples of a ragged client shard — the mean renormalizes over the
+    real samples, and a fully-padded batch contributes zero loss (and zero
+    gradient) instead of NaN."""
     lg = mnist_logits(params, x, activation)
     lse = jax.nn.logsumexp(lg, axis=-1)
     gold = jnp.take_along_axis(lg, y[:, None], axis=-1)[:, 0]
-    return jnp.mean(lse - gold)
+    per_sample = lse - gold
+    if sample_mask is None:
+        return jnp.mean(per_sample)
+    m = sample_mask.astype(per_sample.dtype)
+    return jnp.sum(per_sample * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 def mnist_accuracy(params, x, y, activation=0):
@@ -47,21 +55,44 @@ def mnist_accuracy(params, x, y, activation=0):
 
 
 def local_sgd(params, x, y, *, lr: float, batch_size: int, epochs: int,
-              activation=0):
+              activation=0, sample_mask=None):
     """ClientUpdate (Algorithm 2 lines 16-21): split local data into batches,
-    run E epochs of SGD.  x: (n, 784), y: (n,) — n must divide by batch."""
+    run E epochs of SGD.  x: (n, 784), y: (n,) — on the dense path n must
+    divide by batch (the wrap-padded fleets guarantee it).
+
+    ``sample_mask`` (optional (n,) bool) supports ragged / drifting client
+    shards: masked-out samples contribute no gradient, each batch loss
+    renormalizes over its real samples, and a batch of pure padding is a
+    no-op step.  The masked path rounds the batch count UP, padding the
+    tail with mask-False samples, so trailing real samples (or a shard
+    smaller than one batch) still train instead of being silently dropped.
+    ``None`` keeps the dense code path bit-exact."""
     n = x.shape[0]
-    nb = n // batch_size
-    xb = x[: nb * batch_size].reshape(nb, batch_size, -1)
-    yb = y[: nb * batch_size].reshape(nb, batch_size)
     grad_fn = jax.grad(mnist_loss)
+    if sample_mask is None:
+        nb = n // batch_size
+        xb = x[: nb * batch_size].reshape(nb, batch_size, -1)
+        yb = y[: nb * batch_size].reshape(nb, batch_size)
+        batches = (xb, yb)
+    else:
+        nb = -(-n // batch_size)  # ceil: never drop real samples
+        pad = nb * batch_size - n
+        xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, batch_size, -1)
+        yb = jnp.pad(y, ((0, pad),)).reshape(nb, batch_size)
+        mb = jnp.pad(
+            sample_mask.astype(bool), ((0, pad),)
+        ).reshape(nb, batch_size)
+        batches = (xb, yb, mb)
 
     def epoch(params, _):
         def step(params, b):
-            g = grad_fn(params, b[0], b[1], activation)
+            if sample_mask is not None:
+                g = grad_fn(params, b[0], b[1], activation, b[2])
+            else:
+                g = grad_fn(params, b[0], b[1], activation)
             return jax.tree.map(lambda p, gg: p - lr * gg, params, g), None
 
-        params, _ = jax.lax.scan(step, params, (xb, yb))
+        params, _ = jax.lax.scan(step, params, batches)
         return params, None
 
     params, _ = jax.lax.scan(epoch, params, None, length=epochs)

@@ -1,0 +1,102 @@
+"""Golden-numerics regression suite: the engine's final state on a small
+fixed config is pinned against committed reference values.
+
+Config: the paper's 12-robot Table II fleet (60 samples/client via the
+dataset registry), 5 rounds of the scan engine with ``fedar`` aggregation
+and the ``foolsgold_sketch`` defense, default Table I constants.  The
+checksums below were produced by this exact config; any data-layer or
+engine refactor that silently shifts the round math breaks them.
+
+The suite runs identically under the plain CI job and the 8-fake-device
+job (pinning both device-count environments); the mesh variant re-runs the
+same config through a 4-shard ``shard_map`` (12 % 4 == 0) and must land on
+the SAME goldens within fp32 reduction-order tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fedar_mnist import fleet_fed, small_model
+from repro.core.engine import FedAREngine
+from repro.core.resources import TaskRequirement
+from repro.data.datasets import make_federated
+
+ROUNDS = 5
+SHARDS = 4  # 12 clients / 4 shards
+
+# --- committed reference values (float64 prints of the fp32 state) -------
+GOLDEN_DIM = 25450
+GOLDEN_SUM = 68.70524917283183
+GOLDEN_L2 = 9.585758314927695
+GOLDEN_PROBES = np.array([
+    0.019304556772112846, -0.06349218636751175, 0.05108308419585228,
+    0.032346710562705994, 0.04970241338014603, 0.06573082506656647,
+    -0.1014396920800209, 0.05873619019985199,
+])
+GOLDEN_TRUST = np.array(
+    [90.0, 55.0, 55.0, 55.0, 90.0, 90.0, 90.0, 90.0, 50.0, 50.0, 90.0, 55.0]
+)
+GOLDEN_FG_HIST_L2 = 10.212746620178223
+
+# fp32 accumulation over 5 rounds x 15 local steps: reduction-order noise
+# stays well under these bands, a numerics regression does not
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def _run(mesh_shape=None):
+    fed = fleet_fed(12, defense="foolsgold_sketch", mesh_shape=mesh_shape)
+    engine = FedAREngine(small_model(32), fed, TaskRequirement())
+    ds = make_federated("table2", 12, samples_per_client=60)
+    data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
+    state, _ = engine.run(engine.init_state(), data, rounds=ROUNDS)
+    return engine, state
+
+
+def _assert_golden(state):
+    p = np.asarray(state.params, np.float64)
+    assert p.size == GOLDEN_DIM
+    np.testing.assert_allclose(p.sum(), GOLDEN_SUM, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        np.linalg.norm(p), GOLDEN_L2, rtol=RTOL, atol=ATOL
+    )
+    probes = p[:: p.size // 8][:8]
+    np.testing.assert_allclose(probes, GOLDEN_PROBES, rtol=RTOL, atol=ATOL)
+    # trust is integer-granular Table I arithmetic — exact
+    np.testing.assert_array_equal(np.asarray(state.trust.score), GOLDEN_TRUST)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(state.fg_history, np.float64)),
+        GOLDEN_FG_HIST_L2, rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_golden_single_device():
+    """The committed checksums, on whatever device count the host exposes
+    (the single-device engine path is device-count independent)."""
+    _, state = _run()
+    _assert_golden(state)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < SHARDS,
+    reason=f"needs {SHARDS} devices "
+    f"(XLA_FLAGS=--xla_force_host_platform_device_count={SHARDS})",
+)
+def test_golden_sharded():
+    """The 4-shard mesh engine lands on the SAME committed goldens (only
+    psum reduction order may differ from the single-device run)."""
+    engine, state = _run(mesh_shape=SHARDS)
+    assert engine.mesh is not None and engine.mesh.devices.size == SHARDS
+    _assert_golden(state)
+
+
+def test_golden_is_data_layer_independent_of_registry_path():
+    """The registry builder and the raw ``table2_fleet`` constructor feed
+    the engine bit-identical arrays — the golden pins BOTH entry points."""
+    from repro.data.federated import table2_fleet
+
+    ds = make_federated("table2", 12, samples_per_client=60)
+    raw = table2_fleet(samples_per_client=60)
+    for k, v in raw.items():
+        np.testing.assert_array_equal(ds.arrays()[k], v)

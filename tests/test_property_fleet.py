@@ -1,10 +1,17 @@
 """Property tests for the federated data layer (hypothesis, via the
-``_hypothesis_compat`` shim): ``dirichlet_partition`` partition laws and
-``scaled_fleet`` fleet invariants."""
+``_hypothesis_compat`` shim): ``dirichlet_partition`` partition laws,
+``scaled_fleet`` fleet invariants, the scenario-registry partitioners
+(``data/scenarios.py``) and ``sybil_fleet`` replica identity."""
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.data.federated import TABLE_II, dirichlet_partition, scaled_fleet
+from repro.data.federated import (
+    TABLE_II,
+    dirichlet_partition,
+    scaled_fleet,
+    sybil_fleet,
+)
+from repro.data.scenarios import make_scenario, quantity_sizes
 
 NUM_SAMPLES = 600
 NUM_CLASSES = 10
@@ -127,3 +134,97 @@ def test_dirichlet_partition_single_client_gets_everything():
     y = _labels(100)
     parts = dirichlet_partition(np.zeros((100, 2)), y, 1, alpha=0.5, seed=3)
     assert len(parts) == 1 and np.array_equal(parts[0], np.arange(100))
+
+
+# ---------------------------------------------------------------------------
+# scenario-registry partitioners + sybil replica identity
+# ---------------------------------------------------------------------------
+
+def _skew_stat(y, parts):
+    """Mean over clients of the top-class share — 1/C for IID, -> 1 as the
+    label distribution collapses."""
+    shares = []
+    for p in parts:
+        if len(p):
+            counts = np.bincount(y[p], minlength=NUM_CLASSES)
+            shares.append(counts.max() / counts.sum())
+    return float(np.mean(shares))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scenario=st.sampled_from(["iid", "label_skew", "quantity_skew"]),
+    num_clients=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scenario_full_pool_is_a_partition(scenario, num_clients, seed):
+    """With no per-client cap, every scenario assigns every pool sample to
+    exactly one client (robot_drift resamples by design and is covered by
+    its schedule invariants below)."""
+    y = _labels()
+    plan = make_scenario(scenario, y, num_clients, None, seed=seed)
+    assert len(plan.client_indices) == num_clients
+    allidx = np.concatenate(plan.client_indices)
+    assert np.array_equal(np.sort(allidx), np.arange(len(y)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200))
+def test_dirichlet_skew_monotone_in_alpha(seed):
+    """The label-skew statistic decreases from the alpha -> 0 regime to the
+    alpha -> inf regime for every seed (Dirichlet concentration law)."""
+    y = _labels(1000)
+    stats = [
+        _skew_stat(
+            y, dirichlet_partition(None, y, 6, alpha=alpha, seed=seed)
+        )
+        for alpha in (0.02, 1.0, 200.0)
+    ]
+    assert stats[0] > stats[2]  # extremes always ordered
+    assert stats[0] >= stats[1] - 0.05  # middle stays between, with slack
+    assert stats[1] >= stats[2] - 0.05
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_clients=st.integers(min_value=1, max_value=64),
+    spc=st.integers(min_value=1, max_value=100),
+    alpha=st.floats(min_value=1e-3, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantity_skew_totals_conserved(num_clients, spc, alpha, seed):
+    """Largest-remainder size rounding: totals conserved EXACTLY, every
+    client non-empty whenever the budget allows."""
+    rng = np.random.default_rng(seed)
+    total = num_clients * spc
+    sizes = quantity_sizes(total, num_clients, alpha, rng)
+    assert sizes.sum() == total
+    assert (sizes >= 1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    num_clients=st.integers(min_value=2, max_value=24),
+    data=st.data(),
+)
+def test_sybil_replicas_bit_identical(num_clients, data):
+    """The sybil clique holds ONE shard duplicated across identities —
+    bit-identical x/y/activation rows — while honest rows match the
+    sybil-free build exactly."""
+    num_sybils = data.draw(
+        st.integers(min_value=1, max_value=num_clients), label="sybils"
+    )
+    seed = data.draw(st.integers(min_value=0, max_value=1000), label="seed")
+    fleet, mask = sybil_fleet(
+        num_clients, num_sybils, seed=seed, samples_per_client=30
+    )
+    clean, _ = sybil_fleet(num_clients, 0, seed=seed, samples_per_client=30)
+    assert mask.sum() == num_sybils and mask[-num_sybils:].all()
+    sy = np.where(mask)[0]
+    for i in sy:
+        np.testing.assert_array_equal(fleet["x"][sy[0]], fleet["x"][i])
+        np.testing.assert_array_equal(fleet["y"][sy[0]], fleet["y"][i])
+        assert fleet["activations"][i] == fleet["activations"][sy[0]]
+    for i in np.where(~mask)[0]:
+        np.testing.assert_array_equal(fleet["x"][i], clean["x"][i])
+        np.testing.assert_array_equal(fleet["y"][i], clean["y"][i])
