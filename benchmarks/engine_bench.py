@@ -4,31 +4,40 @@ rounds/sec scaling of the mesh-sharded engine over fake host devices.
 Measures communication rounds/sec at fleet sizes N in {12, 128, 512, 2048}
 for (a) the seed-style python loop — one eager dispatch per round with host
 round-trips for the history rows — and (b) the ``lax.scan`` engine, which
-compiles once and keeps all R rounds on-device.  The ``--devices`` dimension
-re-runs the scan engine with ``FedConfig.mesh_shape=k`` for each requested
-device count: every count spawns a worker process with
-``XLA_FLAGS=--xla_force_host_platform_device_count=k`` (the flag must land
-before jax initializes), so one invocation records the 1-vs-k scaling curve.
+compiles once and keeps all R rounds on-device.  Compile time is reported
+separately (``compile_sec``) from steady-state rounds/sec: the first run
+(compile + warm-up) is excluded from the timed repeats, and the steady
+number is the median over repeats (3 in ``--quick`` — the repeat-median the
+CI perf gate leans on against runner jitter).
+
+The ``--devices`` dimension re-runs the scan engine with
+``FedConfig.mesh_shape=k`` for each requested device count: every count
+spawns a worker process with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=k`` (the flag must land before jax initializes), so one
+invocation records the 1-vs-k scaling curve.
 
 The ``defense`` axis re-runs the scan engine per robust-defense strategy
 (none vs dense foolsgold vs the sketched cluster-aware variant), pricing
 the O(N*D) dense similarity gather against the (N, r) sketch.  The
-``scenario`` axis re-runs it per non-IID data scenario from the federated
-dataset registry (``repro/data/datasets.py``) at an equal per-client sample
-budget, pricing the masked ragged-shard path and the windowed drift
-schedule against the dense wrap-padded fleet (``quantity_skew`` rows also
-carry that scenario's Dirichlet-max padding width, its inherent cost).
+``scenario`` axis re-runs it per non-IID data scenario through the PACKED
+bucketed layout (``FederatedDataset.packed_arrays`` — the engine's
+padding-free hot path), at an equal per-client sample budget; ``dense``
+keeps the legacy wrap-padded fleet as the baseline.  The ``gated`` axis
+prices selection-gated local SGD (``FedConfig.select_frac``): the engine
+vmaps only the statically-capped selected cohort instead of all N clients.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
-Emits ``BENCH_engine.json`` (rounds/sec per fleet size, per device count,
-per defense strategy and per data scenario) for the perf trajectory; also
-wired into ``benchmarks.run``.
+Emits ``BENCH_engine.json`` (rounds/sec + compile_sec per fleet size, per
+device count, per defense strategy, per data scenario and per gating mode)
+for the perf trajectory; also wired into ``benchmarks.run`` and gated by
+``benchmarks.perf_gate`` in CI.
 """
 from __future__ import annotations
 
 import json
 import os
+import statistics
 import subprocess
 import sys
 import time
@@ -44,34 +53,40 @@ from repro.data.federated import scaled_fleet
 
 FLEET_SIZES = (12, 128, 512, 2048)
 QUICK_SIZES = (12, 128)
-SHARDED_SIZES = (128, 512)
+SHARDED_SIZES = (128, 512, 2048)
 QUICK_SHARDED_SIZES = (128,)
 DEVICE_COUNTS = (1, 8)
 DEFENSES = ("none", "foolsgold", "foolsgold_sketch")
 DEFENSE_SIZES = (128, 512)
 QUICK_DEFENSE_SIZES = (128,)
 SCENARIOS = ("dense", "iid", "label_skew", "quantity_skew", "robot_drift")
-SCENARIO_SIZES = (128, 512)
+SCENARIO_SIZES = (128, 512, 2048)
 QUICK_SCENARIO_SIZES = (128,)
+GATED_SIZES = (128, 512)
+QUICK_GATED_SIZES = (128,)
+GATED_FRAC = 0.5  # = client_fraction: cohort exactly covers the selection
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
+QUICK_REPEATS = 3  # repeat-median absorbs CI runner jitter
+FULL_REPEATS = 2
 
 
 def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none",
-          scenario: str | None = None):
+          scenario: str | None = None, select_frac: float | None = None):
     fed = fleet_fed(n, local_epochs=1, local_batch_size=20, defense=defense,
-                    mesh_shape=mesh_shape)
+                    mesh_shape=mesh_shape, select_frac=select_frac)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
     if scenario is None or scenario == "dense":
         raw = scaled_fleet(n, samples_per_client=SAMPLES)
     else:
-        # same per-client sample budget as the dense baseline.  iid /
-        # label_skew / robot_drift then isolate mask/schedule overhead;
-        # quantity_skew additionally pays for its Dirichlet-max padded
-        # width — an inherent engine cost of that scenario, not mask math
+        # same per-client sample budget as the dense baseline, through the
+        # engine's packed bucketed layout: iid / label_skew / robot_drift
+        # isolate mask/schedule overhead, quantity_skew additionally pays
+        # its (<= 2x, batch-quantized) pad-to-bucket residual
+        shards = engine.comms.shards
         raw = make_federated(
             "digits", n, scenario=scenario, samples_per_client=SAMPLES
-        ).arrays()
-    data = {k: jnp.asarray(v) for k, v in raw.items()}
+        ).packed_arrays(shards=shards, quantum=fed.local_batch_size)
+    data = jax.tree.map(jnp.asarray, raw)
     return engine, data
 
 
@@ -84,12 +99,28 @@ def _time_python(engine, data, rounds: int) -> float:
     return (time.perf_counter() - t0) / rounds
 
 
-def _time_scan(engine, data, rounds: int) -> float:
+def _time_scan(engine, data, rounds: int, repeats: int = FULL_REPEATS) -> dict:
+    """{"rounds_per_sec": steady-state median, "compile_sec": first-call
+    wall time minus the steady cost of its rounds} — compile and warm-up
+    never pollute the throughput number."""
     state = engine.init_state()
-    jax.block_until_ready(engine.run(state, data, rounds=rounds))  # compile
     t0 = time.perf_counter()
     jax.block_until_ready(engine.run(state, data, rounds=rounds))
-    return (time.perf_counter() - t0) / rounds
+    first = time.perf_counter() - t0
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.run(state, data, rounds=rounds))
+        times.append((time.perf_counter() - t0) / rounds)
+    steady = statistics.median(times)
+    return {
+        "rounds_per_sec": 1.0 / steady,
+        "compile_sec": round(max(0.0, first - rounds * steady), 3),
+    }
+
+
+def _repeats(quick: bool) -> int:
+    return QUICK_REPEATS if quick else FULL_REPEATS
 
 
 def bench(quick: bool = False):
@@ -101,17 +132,18 @@ def bench(quick: bool = False):
         r_py = max(2, 8 // max(1, n // 128))
         r_scan = max(4, 16 // max(1, n // 512))
         s_py = _time_python(engine, data, r_py)
-        s_scan = _time_scan(engine, data, r_scan)
-        rps_py, rps_scan = 1.0 / s_py, 1.0 / s_scan
+        scan = _time_scan(engine, data, r_scan, repeats=_repeats(quick))
+        rps_py, rps_scan = 1.0 / s_py, scan["rounds_per_sec"]
         speedup = rps_scan / rps_py
         rows.append((f"engine_python_N{n}", round(s_py * 1e6, 1),
                      round(rps_py, 2)))
-        rows.append((f"engine_scan_N{n}", round(s_scan * 1e6, 1),
+        rows.append((f"engine_scan_N{n}", round(1e6 / rps_scan, 1),
                      round(rps_scan, 2)))
         rows.append((f"engine_speedup_N{n}", 0.0, round(speedup, 2)))
         summary[str(n)] = {
             "python_rounds_per_sec": rps_py,
             "scan_rounds_per_sec": rps_scan,
+            "scan_compile_sec": scan["compile_sec"],
             "speedup": speedup,
         }
     return rows, summary
@@ -124,7 +156,8 @@ def bench_sharded_worker(device_count: int, quick: bool) -> dict:
     mesh = device_count if device_count > 1 else None
     for n in QUICK_SHARDED_SIZES if quick else SHARDED_SIZES:
         engine, data = _make(n, mesh_shape=mesh)
-        out[str(n)] = 1.0 / _time_scan(engine, data, rounds=8)
+        out[str(n)] = _time_scan(engine, data, rounds=8,
+                                 repeats=_repeats(quick))
     return out
 
 
@@ -136,19 +169,35 @@ def bench_defense(quick: bool = False) -> dict:
         out[str(n)] = {}
         for defense in DEFENSES:
             engine, data = _make(n, defense=defense)
-            out[str(n)][defense] = 1.0 / _time_scan(engine, data, rounds=4)
+            out[str(n)][defense] = _time_scan(engine, data, rounds=4,
+                                              repeats=_repeats(quick))
     return out
 
 
 def bench_scenario(quick: bool = False) -> dict:
     """rounds/sec of the scan engine per data scenario: the dense wrap-
-    padded fleet vs the masked ragged shards vs the windowed drift path."""
+    padded fleet vs the packed bucketed layout per non-IID scenario."""
     out = {}
     for n in QUICK_SCENARIO_SIZES if quick else SCENARIO_SIZES:
         out[str(n)] = {}
         for scenario in SCENARIOS:
             engine, data = _make(n, scenario=scenario)
-            out[str(n)][scenario] = 1.0 / _time_scan(engine, data, rounds=4)
+            out[str(n)][scenario] = _time_scan(engine, data, rounds=4,
+                                               repeats=_repeats(quick))
+    return out
+
+
+def bench_gated(quick: bool = False) -> dict:
+    """rounds/sec of selection-gated local SGD (select_frac < 1: the scan
+    body vmaps only the statically-capped selected cohort) vs the full-N
+    vmap on the same fleet."""
+    out = {}
+    for n in QUICK_GATED_SIZES if quick else GATED_SIZES:
+        out[str(n)] = {}
+        for mode, frac in (("full", None), ("gated", GATED_FRAC)):
+            engine, data = _make(n, select_frac=frac)
+            out[str(n)][mode] = _time_scan(engine, data, rounds=8,
+                                           repeats=_repeats(quick))
     return out
 
 
@@ -176,8 +225,25 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     return result
 
 
+def bench_gated_packed(quick: bool = False) -> dict:
+    """Gating composed with the packed bucketed layout (quantity_skew).
+    The per-bucket static cap is min(rows_b, C) — caps sum toward N across
+    buckets, so the composition saves less than dense gating; this axis
+    keeps that honest in BENCH_engine.json."""
+    out = {}
+    for n in QUICK_GATED_SIZES if quick else GATED_SIZES:
+        out[str(n)] = {}
+        for mode, frac in (("packed_full", None), ("packed_gated",
+                                                   GATED_FRAC)):
+            engine, data = _make(n, scenario="quantity_skew",
+                                 select_frac=frac)
+            out[str(n)][mode] = _time_scan(engine, data, rounds=8,
+                                           repeats=_repeats(quick))
+    return out
+
+
 def write_json(summary, devices=None, defense=None, scenario=None,
-               path: str = "BENCH_engine.json") -> None:
+               gated=None, path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
         payload["sharded_rounds_per_sec_by_devices"] = devices
@@ -185,8 +251,21 @@ def write_json(summary, devices=None, defense=None, scenario=None,
         payload["defense_rounds_per_sec"] = defense
     if scenario is not None:
         payload["scenario_rounds_per_sec"] = scenario
+    if gated is not None:
+        payload["gated_rounds_per_sec"] = gated
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
+
+
+def _rps(entry) -> float:
+    """rounds/sec from a bench leaf (dict schema or a legacy float) — the
+    one schema decoder, shared with the CI gate."""
+    from benchmarks.perf_gate import _rps as gate_rps
+
+    val = gate_rps(entry)
+    if val is None:
+        raise ValueError(f"not a bench throughput leaf: {entry!r}")
+    return val
 
 
 def _parse_counts(argv) -> tuple:
@@ -208,19 +287,26 @@ def main() -> None:
     devices = bench_devices(quick=quick, counts=_parse_counts(argv))
     defense = bench_defense(quick=quick)
     scenario = bench_scenario(quick=quick)
-    write_json(summary, devices, defense, scenario)
+    gated = bench_gated(quick=quick)
+    for n, modes in bench_gated_packed(quick=quick).items():
+        gated.setdefault(n, {}).update(modes)
+    write_json(summary, devices, defense, scenario, gated)
     for k, per_n in devices.items():
-        for n, rps in per_n.items():
-            rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / rps, 1),
-                         round(rps, 2)))
+        for n, v in per_n.items():
+            rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / _rps(v), 1),
+                         round(_rps(v), 2)))
     for n, per_d in defense.items():
-        for d, rps in per_d.items():
-            rows.append((f"engine_scan_N{n}_{d}", round(1e6 / rps, 1),
-                         round(rps, 2)))
+        for d, v in per_d.items():
+            rows.append((f"engine_scan_N{n}_{d}", round(1e6 / _rps(v), 1),
+                         round(_rps(v), 2)))
     for n, per_s in scenario.items():
-        for s, rps in per_s.items():
-            rows.append((f"engine_scan_N{n}_data_{s}", round(1e6 / rps, 1),
-                         round(rps, 2)))
+        for s, v in per_s.items():
+            rows.append((f"engine_scan_N{n}_data_{s}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
+    for n, per_g in gated.items():
+        for g, v in per_g.items():
+            rows.append((f"engine_scan_N{n}_sgd_{g}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")

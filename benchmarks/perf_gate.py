@@ -1,0 +1,144 @@
+"""CI perf gate: fail on rounds/sec regressions against the committed
+``BENCH_engine.json``.
+
+Usage::
+
+    python -m benchmarks.perf_gate BASELINE.json FRESH.json [--tolerance 0.30]
+
+Walks every rounds/sec leaf of both payloads (the top python/scan summary,
+the sharded-by-devices, defense, scenario and gated axes) and compares the
+axes present in BOTH files — a freshly added axis can't regress, a removed
+one is reported as missing.  A leaf fails when the fresh number falls below
+``(1 - tolerance) * calibration * baseline``, where ``calibration`` is the
+median fresh/baseline ratio across all shared axes, clamped to
+``[1 - 2 * tolerance, 1]``: the committed numbers come from whatever box
+regenerated them, CI runners are uniformly slower or faster, and the
+median ratio cancels that machine factor while a SINGLE axis falling out
+of line — the signature of a hot-path regression — still trips the gate.
+The floor keeps a regression broad enough to drag the median (one in the
+shared scan round body feeds nearly every axis) from hiding behind the
+calibration: past 2x the tolerance band the gate fires regardless.
+``--absolute`` disables the calibration.  Tolerance
+defaults to 30%, sized for CI runner jitter on top of the quick preset's
+repeat-median timing (``engine_bench._time_scan`` medians 3 repeats in
+``--quick`` and excludes compile + warm-up).  Handles both the current
+dict schema ({"rounds_per_sec": ..., "compile_sec": ...}) and the legacy
+bare-float leaves, so the gate keeps working across schema migrations.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+from typing import Iterator, Tuple
+
+DEFAULT_TOLERANCE = 0.30
+
+# summary-axis keys that are rounds/sec (the rest are ratios / compile times)
+_SUMMARY_RPS_KEYS = ("python_rounds_per_sec", "scan_rounds_per_sec")
+
+
+def _rps(entry) -> float | None:
+    if isinstance(entry, dict):
+        val = entry.get("rounds_per_sec")
+        return None if val is None else float(val)
+    if isinstance(entry, (int, float)):
+        return float(entry)
+    return None
+
+
+def iter_axes(payload: dict) -> Iterator[Tuple[str, float]]:
+    """Yield ("axis/path", rounds_per_sec) for every throughput leaf."""
+    for n, entry in payload.get("rounds_per_sec", {}).items():
+        if isinstance(entry, dict):
+            for key in _SUMMARY_RPS_KEYS:
+                if key in entry:
+                    yield f"rounds_per_sec/{n}/{key}", float(entry[key])
+    for axis in ("sharded_rounds_per_sec_by_devices", "defense_rounds_per_sec",
+                 "scenario_rounds_per_sec", "gated_rounds_per_sec"):
+        for outer, inner in payload.get(axis, {}).items():
+            if not isinstance(inner, dict):
+                continue
+            for leaf, entry in inner.items():
+                val = _rps(entry)
+                if val is not None:
+                    yield f"{axis}/{outer}/{leaf}", val
+
+
+def compare(baseline: dict, fresh: dict,
+            tolerance: float = DEFAULT_TOLERANCE,
+            normalize: bool = True):
+    """Returns (failures, checked, missing, calibration): leaves below
+    ``(1 - tol) * calibration * base``, the number compared, baseline axes
+    absent from fresh, and the machine-speed factor applied (1.0 when
+    ``normalize`` is off or nothing is shared)."""
+    base = dict(iter_axes(baseline))
+    new = dict(iter_axes(fresh))
+    shared = sorted(set(base) & set(new))
+    calibration = 1.0
+    if normalize and shared:
+        # median machine-speed ratio; capped at 1 so a fast box can't mask
+        # a regression, and FLOORED at (1 - 2*tol) so a regression broad
+        # enough to move the median (e.g. a slowdown in the shared scan
+        # round body, which feeds nearly every axis) can't masquerade as a
+        # slow runner — beyond 2x the tolerance band the gate fires even
+        # if every axis moved together.  Within that band a uniformly
+        # slower CI machine is (intentionally) indistinguishable from a
+        # uniform code regression; the committed-numbers workflow accepts
+        # that blind spot in exchange for not failing every PR on runner
+        # hardware churn.
+        calibration = min(
+            1.0,
+            max(1.0 - 2.0 * tolerance,
+                statistics.median(new[p] / base[p] for p in shared)),
+        )
+    failures, checked, missing = [], 0, []
+    for path, base_rps in sorted(base.items()):
+        if path not in new:
+            missing.append(path)
+            continue
+        checked += 1
+        floor = (1.0 - tolerance) * calibration * base_rps
+        if new[path] < floor:
+            failures.append((path, base_rps, new[path]))
+    return failures, checked, missing, calibration
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    tol = DEFAULT_TOLERANCE
+    normalize = True
+    if "--tolerance" in argv:
+        i = argv.index("--tolerance")
+        tol = float(argv[i + 1])
+        del argv[i:i + 2]
+    if "--absolute" in argv:
+        normalize = False
+        argv.remove("--absolute")
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        baseline = json.load(f)
+    with open(argv[1]) as f:
+        fresh = json.load(f)
+    failures, checked, missing, calibration = compare(
+        baseline, fresh, tol, normalize=normalize
+    )
+    print(f"perf gate: {checked} shared axes checked at "
+          f"{tol:.0%} tolerance "
+          f"(machine-speed calibration x{calibration:.2f})")
+    for path in missing:
+        print(f"  [warn] axis missing from fresh run: {path}")
+    if failures:
+        print("REGRESSIONS (fresh < (1 - tol) * baseline):")
+        for path, b, n in failures:
+            print(f"  {path}: {b:.2f} -> {n:.2f} rounds/sec "
+                  f"({n / b - 1.0:+.0%})")
+        return 1
+    print("perf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,8 +26,11 @@ def main() -> None:
     engine_devices = engine_bench.bench_devices(quick=quick)
     engine_defense = engine_bench.bench_defense(quick=quick)
     engine_scenario = engine_bench.bench_scenario(quick=quick)
+    engine_gated = engine_bench.bench_gated(quick=quick)
+    for n, modes in engine_bench.bench_gated_packed(quick=quick).items():
+        engine_gated.setdefault(n, {}).update(modes)
     engine_bench.write_json(engine_summary, engine_devices, engine_defense,
-                            engine_scenario)  # BENCH_engine.json
+                            engine_scenario, engine_gated)  # BENCH_engine.json
     rows += engine_rows
     rows += kernels_bench.bench()
     rows += roofline.rows()

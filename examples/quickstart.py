@@ -41,6 +41,17 @@ def main():
                          "(digits/mnist/emnist); default label_skew")
     ap.add_argument("--samples", type=int, default=300,
                     help="samples per client")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="feed pool datasets through the bucketed packed "
+                         "layout (pad-to-bucket, not pad-to-max; "
+                         "bit-identical numerics, less padded compute). "
+                         "--no-packed keeps the rectangular layout")
+    ap.add_argument("--select_frac", type=float, default=None,
+                    help="selection-gated local SGD: statically cap the "
+                         "SGD cohort at ceil(frac * N) and skip unselected "
+                         "clients' compute (>= 0.5, the selection "
+                         "fraction; numerics unchanged)")
     ap.add_argument("--alpha", type=float, default=None,
                     help="Dirichlet concentration for the skew scenarios; "
                          "default 0.5")
@@ -89,6 +100,7 @@ def main():
                     timeout=10.0,
                     defense="foolsgold" if args.clients == 12
                     else "foolsgold_sketch",
+                    select_frac=args.select_frac,
                     mesh_shape=args.devices if args.devices > 1 else None)
     server = FedARServer(MnistConfig(), fed, TaskRequirement())
     if server.mesh is not None:
@@ -111,7 +123,22 @@ def main():
               "deterministic offline synthetic fallback")
     print(f"[data] dataset={ds.name} scenario={ds.scenario or '-'} "
           f"shards={ds.x.shape} mean n_u={ds.sizes.mean():.0f}")
-    data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
+    if args.packed and name in ("digits", "mnist", "emnist"):
+        # bucketed packed layout: pad-to-bucket instead of pad-to-max, so
+        # local-SGD compute tracks the real sample volume (bit-identical
+        # round numerics; see FederatedDataset.packed_arrays)
+        import jax
+
+        raw = ds.packed_arrays(
+            shards=server.mesh.devices.size if server.mesh is not None
+            else 1,
+            quantum=fed.local_batch_size,
+        )
+        widths = [xb.shape[1] for xb in raw["packed"]["x"]]
+        print(f"[data] packed into {len(widths)} buckets, widths {widths}")
+        data = jax.tree.map(jnp.asarray, raw)
+    else:
+        data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
     # evaluate on the held-out split of the same source (test IDX files when
     # cached, the synthetic generator otherwise)
     eval_name = name if name in ("mnist", "emnist") else "synthetic"

@@ -193,6 +193,19 @@ class FedConfig:
     # weighted-reduction backend for the hot aggregation path:
     # auto (Pallas kernel on TPU, einsum elsewhere) | kernel | einsum
     agg_impl: str = "auto"
+    # local-SGD backend for the vmapped ClientUpdate hot path: auto (fused
+    # Pallas kernel on TPU, XLA vmap elsewhere) | kernel | einsum — mirrors
+    # ``agg_impl``/``defense_impl`` (einsum = the pure-XLA vmap path)
+    sgd_impl: str = "auto"
+    # --- selection-gated local SGD (core/engine.py) ---
+    # select_frac: static cohort cap as a fraction of the fleet.  When set,
+    # the engine gathers the ceil(select_frac * N) selected clients, runs
+    # local SGD over that cohort only, and scatters the deltas back
+    # (unselected clients contribute exact zeros, so round numerics are
+    # unchanged).  Must be >= client_fraction or selection could overflow
+    # the static cap.  None (default) keeps the full-N vmap — the seed-
+    # exact path the golden-numerics suite pins.
+    select_frac: Optional[float] = None
     # client selection: "trust" (FedAR, Alg 2 line 8) | "random" (the
     # random-selection baseline the paper argues against)
     selection: str = "trust"

@@ -41,18 +41,48 @@ def deviation_mask(
     gamma: float,
     *,
     comms: ClientComms = _IDENTITY,
+    cohort=None,
 ):
     """Paper's ban trigger ``G^i - D_m^i > gamma``: robust z-score of each
     client's update distance from the active-population mean.
 
     ``deltas`` is shard-local (N_loc, D) under mesh comms; ``active`` is the
     replicated (N,) mask.  Returns the replicated (N,) deviated mask — the
-    population mean/std come from psums of shard partials and a gather of
-    the per-client distances."""
-    w = comms.local(active).astype(jnp.float32)[:, None]
-    denom = jnp.maximum(comms.psum(jnp.sum(w)), 1.0)
-    mean = comms.psum(jnp.sum(deltas * w, axis=0)) / denom
-    dist = comms.all_gather(jnp.linalg.norm(deltas - mean, axis=1))  # (N,)
+    population mean/std come from ONE psum of shard partials (the (D,)
+    weighted-delta sum with the scalar count fused into its tail slot: a
+    psum is elementwise, so concatenating the operands is exact and saves a
+    per-round collective dispatch) and a gather of the per-client
+    distances.
+
+    ``cohort=(canon, valid)``: selection-gated mode — ``deltas`` holds only
+    this shard's gated cohort rows (every selected client, plus statically-
+    padded slots with ``valid`` False); ``canon`` maps rows to local client
+    slots.  Unselected clients' deltas are exact zeros and never active, so
+    the statistics are over the same population — cohort mode just skips
+    the O(N*D) sweeps for rows known to be zero (only summation order
+    shifts, at fp32 ulp level)."""
+    D = deltas.shape[1]
+    if cohort is None:
+        act_rows = comms.local(active)
+    else:
+        canon, valid = cohort
+        act_rows = comms.local(active)[canon] & valid
+    w = act_rows.astype(jnp.float32)[:, None]
+    part = jnp.concatenate(
+        [jnp.sum(deltas * w, axis=0), jnp.sum(w)[None]]
+    )
+    tot = comms.psum(part)  # (D + 1,): weighted delta sum + active count
+    mean = tot[:D] / jnp.maximum(tot[D], 1.0)
+    dist_rows = jnp.linalg.norm(deltas - mean, axis=1)
+    if cohort is not None:
+        # restore local client order (fill rows drop; non-cohort clients
+        # read 0, which the active mask nan-filters out of the stats)
+        canon, valid = cohort
+        n_loc = comms.local(active).shape[0]
+        dist_rows = jnp.zeros((n_loc,), dist_rows.dtype).at[
+            jnp.where(valid, canon, n_loc)
+        ].set(dist_rows, mode="drop")
+    dist = comms.all_gather(dist_rows)  # (N,)
     act_dist = jnp.where(active, dist, jnp.nan)
     mu = jnp.nanmean(act_dist)
     sd = jnp.sqrt(jnp.nanmean((act_dist - mu) ** 2) + 1e-12)
@@ -74,6 +104,7 @@ def fedavg_aggregate(
     staleness=None,
     impl: str = "einsum",
     comms: ClientComms = _IDENTITY,
+    cohort=None,
 ):
     """w <- w + sum_m mask_m * weight_m * s(tau_m) * delta_m / sum(...).
 
@@ -87,19 +118,34 @@ def fedavg_aggregate(
     denominator is computed on the full vectors (bit-identical to the
     single-device path) and only the (D,) numerator is a psum of per-shard
     partial reductions — the trust*staleness-weighted psum GSPMD schedules
-    like a data-parallel gradient reduction."""
+    like a data-parallel gradient reduction.
+
+    ``cohort=(canon, valid)``: selection-gated mode — ``deltas`` holds only
+    the shard's gated cohort rows; ``canon``/``valid`` map them to local
+    client slots.  Every contributing client is in the cohort and the rest
+    are exact zeros, so the weighted numerator is the same sum with the
+    zero rows skipped (fp32 ulp-level order shift); the denominator stays
+    on the full replicated vectors either way."""
     w = weights * mask.astype(weights.dtype)
     decay = 1.0 if staleness is None else staleness_weight(staleness)
     denom = jnp.maximum(jnp.sum(w * decay), 1e-9)
     w_loc = comms.local(w)
+    stale_loc = None if staleness is None else comms.local(staleness)
+    if cohort is not None:
+        canon, valid = cohort
+        w_loc = w_loc[canon] * valid
+        if stale_loc is not None:
+            stale_loc = stale_loc[canon]
     if _resolve_impl(impl) == "kernel":
         num = fedavg_agg(
             deltas, w_loc,
-            staleness=None if staleness is None else comms.local(staleness),
+            staleness=stale_loc,
             interpret=jax.default_backend() != "tpu",
         )
     else:
-        decay_loc = 1.0 if staleness is None else comms.local(decay)
+        decay_loc = (
+            1.0 if stale_loc is None else staleness_weight(stale_loc)
+        )
         num = jnp.einsum("n,nd->d", w_loc * decay_loc, deltas)
     return global_flat + comms.psum(num) / denom
 

@@ -159,6 +159,28 @@ def replicated_spec() -> P:
     return P()
 
 
+def packed_specs(fed: FedConfig, packed: dict) -> dict:
+    """PartitionSpecs for a bucketed packed-data dict
+    (``FederatedDataset.packed_arrays``): every per-bucket row-indexed array
+    shards its row axis over the ``clients`` mesh (buckets are laid out
+    shard-major with equal per-shard row counts, so a plain row split lands
+    each shard exactly its clients), ``round_mask`` buckets shard axis 1
+    like the dense drift schedule, and the scalar metadata replicates."""
+    Pc, Pr = client_spec(fed), replicated_spec()
+    specs = {
+        key: tuple(Pc for _ in packed[key])
+        for key in ("x", "y", "mask", "perm", "valid", "act")
+    }
+    specs["inv"] = Pc  # (N,) canonical -> shard-local packed row
+    specs["n_max"] = Pr
+    specs["shards"] = Pr
+    if "round_mask" in packed:
+        specs["round_mask"] = tuple(
+            window_client_spec(fed) for _ in packed["round_mask"]
+        )
+    return specs
+
+
 # ---------------------------------------------------------------------------
 # LM-workload cohort step (model-parallel mesh; data axis = client cohorts)
 # ---------------------------------------------------------------------------

@@ -48,9 +48,21 @@ engine; only reduction order differs (fp32 tolerance).  With one device (or
 ``mesh_shape`` unset) the identity ``ClientComms`` reproduces the seed
 numerics exactly.
 
+Padding-free, selection-gated hot path: per-round compute tracks real
+selected samples, not N * n_max.  ``data["packed"]`` (built by
+``FederatedDataset.packed_arrays``) swaps the rectangular sample slab for
+size-bucketed blocks — local SGD runs per bucket and a single inverse-
+permutation gather restores canonical client order — while
+``FedConfig.select_frac`` gates the SGD down to the statically-capped
+selected cohort (unselected clients contribute exact zeros).  Both paths
+are bit-identical (fp32) to the dense full-N vmap, so they compose freely
+with every aggregation mode, defense and the mesh.
+
 The hot aggregation path goes through the Pallas ``fedavg_agg`` kernel
-(trust-weighted + staleness-decayed in one pass) when running on TPU; see
-``FedConfig.agg_impl``.
+(trust-weighted + staleness-decayed in one pass) when running on TPU
+(``FedConfig.agg_impl``); local SGD itself routes through the fused Pallas
+``local_sgd`` kernel (``FedConfig.sgd_impl``) that runs each client's whole
+masked epochs x batches loop in one ``pallas_call``.
 """
 from __future__ import annotations
 
@@ -70,6 +82,7 @@ from repro.core.distributed import (
     MeshComms,
     client_mesh,
     client_spec,
+    packed_specs,
     replicated_spec,
     window_client_spec,
 )
@@ -82,7 +95,16 @@ from repro.core.resources import (
 )
 from repro.core.selection import select_clients
 from repro.core.trust import TrustState, init_trust, update_trust
+from repro.kernels.local_sgd import fused_fits_vmem, local_sgd_fused
 from repro.models.mnist import init_mnist, local_sgd, mnist_accuracy, mnist_loss
+
+
+def _resolve_sgd_impl(impl: str) -> str:
+    """auto -> fused Pallas kernel on TPU, XLA vmap elsewhere (mirrors
+    ``agg_impl`` / ``defense_impl`` routing)."""
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "einsum"
+    return impl
 
 
 def flatten(params) -> jnp.ndarray:
@@ -165,8 +187,31 @@ class FedAREngine:
             if self.mesh is not None
             else ClientComms()
         )
-        self._step = jax.jit(self._step_fn)
-        self._run = jax.jit(self._run_fn, static_argnames=("rounds",))
+        # selection-gated local SGD: static cohort cap C = ceil(frac * N).
+        # C must cover the selection count k or selected updates would be
+        # silently dropped (numerics depend on every selected delta).
+        if fed.select_frac is not None:
+            if not 0.0 < fed.select_frac <= 1.0:
+                raise ValueError(
+                    f"select_frac must be in (0, 1], got {fed.select_frac}"
+                )
+            self.cohort_cap = max(
+                1, int(np.ceil(fed.select_frac * fed.num_clients))
+            )
+            k = max(1, int(fed.num_clients * fed.client_fraction))
+            if self.cohort_cap < k:
+                raise ValueError(
+                    f"select_frac={fed.select_frac} caps the SGD cohort at "
+                    f"C={self.cohort_cap} < the {k} clients selection can "
+                    f"pick (client_fraction={fed.client_fraction}); raise "
+                    f"select_frac to at least client_fraction"
+                )
+        else:
+            self.cohort_cap = None
+        self._step = jax.jit(self._step_fn, static_argnames=("train_flops",))
+        self._run = jax.jit(
+            self._run_fn, static_argnames=("rounds", "train_flops")
+        )
 
     # ------------------------------------------------------------------
     def init_state(self) -> EngineState:
@@ -210,8 +255,17 @@ class FedAREngine:
         """Specs for the engine's data dict.  The optional ragged-shard keys
         (``mask`` (N, n), ``round_mask`` (W, N, n) — see ``data/datasets``)
         shard their client axis like the sample arrays; pass ``data`` so the
-        spec pytree matches the dict actually fed to the shard_map."""
+        spec pytree matches the dict actually fed to the shard_map.  The
+        bucketed packed layout (``FederatedDataset.packed_arrays``) swaps
+        the dense sample rectangle for per-bucket arrays whose row axis
+        shards over clients (``distributed.packed_specs``)."""
         Pc, Pr = client_spec(self.fed), replicated_spec()
+        if data is not None and "packed" in data:
+            return {
+                "sizes": Pr,
+                "activations": Pr,
+                "packed": packed_specs(self.fed, data["packed"]),
+            }
         specs = {"x": Pc, "y": Pc, "sizes": Pr, "activations": Pc}
         if data is not None:
             if "mask" in data:
@@ -233,46 +287,33 @@ class FedAREngine:
             None if force_straggler is None else Pr,
         )
 
-    # ------------------------------------------------------------------
-    def _round_step(self, state: EngineState, data, eval_set, force_straggler):
-        """One communication round, fully traceable.  ``data``: dict with
-        stacked per-client arrays x (N, n, 784), y (N, n), sizes (N,),
-        activations (N,) int32 (0=relu, 1=softmax per Table II), plus the
-        optional ragged-shard keys from ``data/datasets``: ``mask`` (N, n)
-        bool marks the real (non-padding) samples, and ``round_mask``
-        (W, N, n) bool is a drift schedule — round t trains on window
-        ``t mod W`` (``sizes`` stays the static n_u aggregation weight).
-
-        Under mesh comms this body executes per-shard: ``data["x"/"y"/
-        "activations"]``, ``state.fg_history`` and ``state.pending_delta``
-        hold this shard's client block; everything (N,)-shaped is
-        replicated, and cross-shard reductions go through ``self.comms``."""
-        fed, cfg, comms = self.fed, self.cfg, self.comms
-        key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), state.round_idx)
-        k_sel, k_lat, _k_poi = jax.random.split(key, 3)
-
-        # --- Algorithm 2 lines 6-10: CheckResource + trust sort + sample
-        # (global (N,) math, replicated across shards)
-        selected, ok = select_clients(
-            k_sel, state.trust, state.resources, self.req, fed
-        )
-
-        # --- ragged / drifting shards: resolve this round's sample mask
-        sample_mask = data.get("mask")
-        if "round_mask" in data:
-            rm = data["round_mask"]
-            active_window = jax.lax.dynamic_index_in_dim(
-                rm, jnp.remainder(state.round_idx, rm.shape[0]), 0,
-                keepdims=False,
+    # ---------------------------------------------------- ClientUpdate
+    def _block_sgd(self, g_flat, x, y, act, m):
+        """Local SGD over one block of clients -> stacked flat local params
+        (rows, D).  Routes ``FedConfig.sgd_impl``: the fused Pallas kernel
+        (``kernels/local_sgd``) runs the whole masked epochs x batches loop
+        per client inside one ``pallas_call``; the XLA path vmaps
+        ``models.mnist.local_sgd`` (the seed-exact reference)."""
+        fed, cfg = self.fed, self.cfg
+        if _resolve_sgd_impl(fed.sgd_impl) == "kernel" and fused_fits_vmem(
+            x.shape[1], cfg.input_dim, cfg.hidden, cfg.num_classes
+        ):
+            p = unflatten(g_flat, self.template)
+            mm = jnp.ones(x.shape[:2], bool) if m is None else m
+            new = local_sgd_fused(
+                p["w1"], p["b1"], p["w2"], p["b2"], x, y, act, mm,
+                lr=self.lr, batch_size=fed.local_batch_size,
+                epochs=fed.local_epochs,
+                interpret=jax.default_backend() != "tpu",
             )
-            sample_mask = (
-                active_window if sample_mask is None
-                else sample_mask & active_window
+            # flatten order must match ``flatten`` (dict leaves sort as
+            # b1, b2, w1, w2)
+            rows = x.shape[0]
+            return jnp.concatenate(
+                [new[k].reshape(rows, -1) for k in ("b1", "b2", "w1", "w2")],
+                axis=1,
             )
 
-        # --- lines 16-21 (ClientUpdate): local SGD on every client, vmapped
-        # over this shard's client block; non-participants are masked out of
-        # the aggregate
         def client_update(p_flat, x, y, act, m=None):
             p = unflatten(p_flat, self.template)
             new = local_sgd(
@@ -287,22 +328,171 @@ class FedAREngine:
             )
             return flatten(new)
 
+        if m is None:
+            return jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
+                g_flat, x, y, act
+            )
+        return jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
+            g_flat, x, y, act, m
+        )
+
+    def _gated_block_locals(self, g_flat, x, y, act, m, sel_rows):
+        """Selection-gated ClientUpdate over one client block: gather the
+        (statically capped) selected rows and run local SGD over that
+        cohort only.  Returns ``(idx, locals_c, valid)`` — the block rows
+        each cohort slot came from, the cohort's post-SGD flat params, and
+        which slots hold a genuinely selected client; the caller expands
+        back with the untouched global params as the fill row, so selected
+        clients' local params (and therefore deltas) are bit-identical to
+        the full-block vmap and unselected deltas are exact zeros."""
+        rows = x.shape[0]
+        cap = min(rows, self.cohort_cap)
+        # stable argsort: selected rows first, in canonical order
+        order = jnp.argsort(jnp.where(sel_rows, 0, 1))
+        idx = order[:cap]
+        valid = sel_rows[idx]
+        m_c = None if m is None else m[idx]
+        locals_c = self._block_sgd(g_flat, x[idx], y[idx], act[idx], m_c)
+        return idx, locals_c, valid
+
+    @staticmethod
+    def _expand_cohort(vals, canon, valid, rows, fill_row):
+        """(cap, D) cohort rows -> (rows, D) canonical block: one int32
+        scatter builds the canonical->cohort-slot map (invalid slots drop,
+        unmapped clients point at the appended ``fill_row``), then one row
+        gather restores canonical order — no (rows, D) zero-buffer +
+        scatter-add chain on the hot path."""
+        cap = vals.shape[0]
+        aug = jnp.concatenate([vals, fill_row[None, :]])
+        inv = jnp.full((rows,), cap, jnp.int32).at[
+            jnp.where(valid, canon, rows)
+        ].set(jnp.arange(cap, dtype=jnp.int32), mode="drop")
+        return aug[inv]
+
+    def _packed_locals(self, g_flat, packed, selected, round_idx):
+        """ClientUpdate over the bucketed packed layout
+        (``FederatedDataset.packed_arrays``) -> (N_loc, D) post-SGD flat
+        local params in canonical order: one block-SGD call per size
+        bucket — cost tracks the bucket widths (<= 2x the real samples)
+        instead of N * n_max — concatenated in packed order and restored
+        by a single gather through the precomputed inverse permutation.
+        Dummy pad rows carry an all-False mask (and ``inv`` never points
+        at them); with ``select_frac`` set each bucket additionally gates
+        down to its selected rows and unselected clients gather the
+        untouched global params (delta exactly zero).
+
+        Returns ``(locals_flat, locals_c, cohort)``: the canonical
+        (N_loc, D) post-SGD params, plus — in gated mode — the compact
+        cohort rows and their ``(canon, valid)`` map so deviation and
+        aggregation can skip the known-zero rows (``None, None``
+        ungated)."""
+        sel_loc = self.comms.local(selected)
+        n_loc = sel_loc.shape[0]
+        parts, canon, valids = [], [], []
+        for b in range(len(packed["x"])):
+            x, y = packed["x"][b], packed["y"][b]
+            m, perm = packed["mask"][b], packed["perm"][b]
+            valid, act = packed["valid"][b], packed["act"][b]
+            if "round_mask" in packed:
+                rm = packed["round_mask"][b]
+                win = jax.lax.dynamic_index_in_dim(
+                    rm, jnp.remainder(round_idx, rm.shape[0]), 0,
+                    keepdims=False,
+                )
+                m = m & win
+            if self.cohort_cap is None:
+                parts.append(self._block_sgd(g_flat, x, y, act, m))
+            else:
+                sel_b = sel_loc[perm] & valid
+                idx, locals_c, vcoh = self._gated_block_locals(
+                    g_flat, x, y, act, m, sel_b
+                )
+                parts.append(locals_c)
+                canon.append(perm[idx])
+                valids.append(vcoh)
+        if self.cohort_cap is None:
+            return jnp.concatenate(parts)[packed["inv"]], None, None
+        locals_c = jnp.concatenate(parts)
+        cohort = (jnp.concatenate(canon), jnp.concatenate(valids))
+        locals_flat = self._expand_cohort(
+            locals_c, cohort[0], cohort[1], n_loc, g_flat
+        )
+        return locals_flat, locals_c, cohort
+
+    # ------------------------------------------------------------------
+    def _round_step(self, state: EngineState, data, eval_set,
+                    force_straggler, train_flops):
+        """One communication round, fully traceable.  ``data``: dict with
+        stacked per-client arrays x (N, n, 784), y (N, n), sizes (N,),
+        activations (N,) int32 (0=relu, 1=softmax per Table II), plus the
+        optional ragged-shard keys from ``data/datasets``: ``mask`` (N, n)
+        bool marks the real (non-padding) samples, and ``round_mask``
+        (W, N, n) bool is a drift schedule — round t trains on window
+        ``t mod W`` (``sizes`` stays the static n_u aggregation weight).
+        Alternatively ``data["packed"]`` holds the bucketed packed layout
+        (see ``_packed_locals``).  ``train_flops`` is the static per-client
+        FLOP count of the virtual-latency model — computed host-side from
+        the *dense* sample width so the physical layout (packed or padded)
+        cannot shift straggler numerics.
+
+        Under mesh comms this body executes per-shard: ``data["x"/"y"/
+        "activations"]`` (or the packed buckets), ``state.fg_history`` and
+        ``state.pending_delta`` hold this shard's client block; everything
+        (N,)-shaped is replicated, and cross-shard reductions go through
+        ``self.comms``."""
+        fed, cfg, comms = self.fed, self.cfg, self.comms
+        key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), state.round_idx)
+        k_sel, k_lat, _k_poi = jax.random.split(key, 3)
+
+        # --- Algorithm 2 lines 6-10: CheckResource + trust sort + sample
+        # (global (N,) math, replicated across shards)
+        selected, ok = select_clients(
+            k_sel, state.trust, state.resources, self.req, fed
+        )
+
         g_flat = state.params
-        if sample_mask is None:
-            locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
-                g_flat, data["x"], data["y"], data["activations"]
+        locals_c = cohort = None  # compact gated-cohort view, when gating
+        if "packed" in data:
+            # --- lines 16-21 (ClientUpdate), padding-free bucketed path
+            locals_flat, locals_c, cohort = self._packed_locals(
+                g_flat, data["packed"], selected, state.round_idx
             )
         else:
-            locals_flat = jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
-                g_flat, data["x"], data["y"], data["activations"], sample_mask
-            )
+            # --- ragged / drifting shards: resolve this round's sample mask
+            sample_mask = data.get("mask")
+            if "round_mask" in data:
+                rm = data["round_mask"]
+                active_window = jax.lax.dynamic_index_in_dim(
+                    rm, jnp.remainder(state.round_idx, rm.shape[0]), 0,
+                    keepdims=False,
+                )
+                sample_mask = (
+                    active_window if sample_mask is None
+                    else sample_mask & active_window
+                )
+
+            # --- lines 16-21 (ClientUpdate): local SGD vmapped over this
+            # shard's client block (or its gated cohort); non-participants
+            # are masked out of the aggregate
+            x, y, act = data["x"], data["y"], data["activations"]
+            if self.cohort_cap is None:
+                locals_flat = self._block_sgd(g_flat, x, y, act, sample_mask)
+            else:
+                idx, locals_c, valid = self._gated_block_locals(
+                    g_flat, x, y, act, sample_mask, comms.local(selected)
+                )
+                cohort = (idx, valid)
+                locals_flat = self._expand_cohort(
+                    locals_c, idx, valid, x.shape[0], g_flat
+                )
         deltas = locals_flat - g_flat[None, :]  # (N_loc, D)
+        # compact deltas: deviation + the fedar/fedavg reduction only touch
+        # cohort rows (the rest are exact zeros), so with the defense off
+        # XLA drops the canonical expansion from the gated hot path
+        delta_c = None if locals_c is None else locals_c - g_flat[None, :]
 
         # --- virtual time: latency per client, straggler = late vs timeout
         model_bytes = self.dim * 4.0
-        train_flops = float(
-            2 * fed.local_epochs * data["x"].shape[1] * cfg.input_dim * cfg.hidden
-        )
         lat = round_latency(
             state.resources,
             train_flops=train_flops,
@@ -320,9 +510,15 @@ class FedAREngine:
             active = selected
         else:
             active = selected & on_time
-        deviated = agg.deviation_mask(
-            deltas, active, fed.deviation_gamma, comms=comms
-        )
+        if cohort is None:
+            deviated = agg.deviation_mask(
+                deltas, active, fed.deviation_gamma, comms=comms
+            )
+        else:
+            deviated = agg.deviation_mask(
+                delta_c, active, fed.deviation_gamma, comms=comms,
+                cohort=cohort,
+            )
         contributing = active & ~deviated
         weights = data["sizes"].astype(jnp.float32)
         # pluggable defense (core/defense.py): the strategy owns its carried
@@ -342,12 +538,13 @@ class FedAREngine:
             arrival=state.pending_arrival,
             valid=state.pending_valid,
         )
+        agg_rows = deltas if cohort is None else delta_c
         if fed.aggregation == "fedavg":
             # synchronous: waits for everyone selected (incl. stragglers)
             sync_active = selected & ~deviated
             g_new = agg.fedavg_aggregate(
-                g_flat, deltas, weights, sync_active, impl=fed.agg_impl,
-                comms=comms,
+                g_flat, agg_rows, weights, sync_active, impl=fed.agg_impl,
+                comms=comms, cohort=cohort,
             )
             round_time = jnp.max(jnp.where(selected, lat, 0.0))
         elif fed.aggregation == "async":
@@ -365,8 +562,8 @@ class FedAREngine:
             round_time = jnp.full((), fed.timeout)
         else:  # fedar (timeout skip)
             g_new = agg.fedavg_aggregate(
-                g_flat, deltas, weights, contributing, impl=fed.agg_impl,
-                comms=comms,
+                g_flat, agg_rows, weights, contributing, impl=fed.agg_impl,
+                comms=comms, cohort=cohort,
             )
             round_time = jnp.full((), fed.timeout)
 
@@ -478,39 +675,79 @@ class FedAREngine:
             check_rep=False,
         )(state, data, eval_set, force_straggler)
 
-    def _step_fn(self, state, data, eval_set, force_straggler):
-        return self._shard(
-            self._round_step, state, data, eval_set, force_straggler
-        )
+    def _step_fn(self, state, data, eval_set, force_straggler, *,
+                 train_flops: float):
+        def body(state, data, eval_set, force_straggler):
+            return self._round_step(
+                state, data, eval_set, force_straggler, train_flops
+            )
 
-    def _run_fn(self, state, data, eval_set, force_straggler, *, rounds: int):
+        return self._shard(body, state, data, eval_set, force_straggler)
+
+    def _run_fn(self, state, data, eval_set, force_straggler, *, rounds: int,
+                train_flops: float):
         def scan_rounds(state, data, eval_set, force_straggler):
             def body(carry, _):
-                return self._round_step(carry, data, eval_set, force_straggler)
+                return self._round_step(
+                    carry, data, eval_set, force_straggler, train_flops
+                )
 
             return jax.lax.scan(body, state, None, length=rounds)
 
         return self._shard(scan_rounds, state, data, eval_set, force_straggler)
 
     # ------------------------------------------------------------------
+    def _train_flops(self, data) -> float:
+        """Static per-client FLOP count for the virtual-latency model,
+        from the DENSE sample width (``n_max`` for packed layouts) — the
+        physical layout must not move straggler numerics."""
+        if "packed" in data:
+            n = float(np.asarray(data["packed"]["n_max"]))
+        else:
+            n = data["x"].shape[1]
+        return float(
+            2 * self.fed.local_epochs * n * self.cfg.input_dim
+            * self.cfg.hidden
+        )
+
+    def _check_packed(self, data) -> None:
+        """Host-side layout check: a packed dict built for k shards only
+        scatters correctly on a k-shard mesh (its ``perm`` is shard-local)."""
+        if "packed" not in data:
+            return
+        built = int(np.asarray(data["packed"]["shards"]))
+        if built != self.comms.shards:
+            raise ValueError(
+                f"packed data was built for {built} shard(s) "
+                f"(FederatedDataset.packed_arrays(shards=...)) but the "
+                f"engine runs {self.comms.shards}; rebuild the packed "
+                f"layout for the active mesh"
+            )
+
     def step(self, state, data, *, eval_set=None, force_straggler=None):
         """One jitted communication round -> (state, RoundOutputs)."""
-        return self._step(state, data, eval_set, force_straggler)
+        self._check_packed(data)
+        return self._step(state, data, eval_set, force_straggler,
+                          train_flops=self._train_flops(data))
 
     def run(self, state, data, *, rounds: int, eval_set=None,
             force_straggler=None):
         """R rounds in a single ``lax.scan`` -> (state, stacked outputs)."""
-        return self._run(state, data, eval_set, force_straggler, rounds=rounds)
+        self._check_packed(data)
+        return self._run(state, data, eval_set, force_straggler,
+                         rounds=rounds, train_flops=self._train_flops(data))
 
     def run_python_loop(self, state, data, *, rounds: int, eval_set=None,
                         force_straggler=None):
         """Seed-style reference driver: one EAGER (un-jitted) dispatch per
         round with a device->host sync of every history row.  Kept as the
         benchmark baseline the scan engine is measured against."""
+        self._check_packed(data)
         outs = []
         for _ in range(rounds):
             state, out = self._step_fn(
-                state, data, eval_set, force_straggler
+                state, data, eval_set, force_straggler,
+                train_flops=self._train_flops(data),
             )
             # per-round host round-trip, exactly like the seed driver
             outs.append(jax.tree.map(np.asarray, out))

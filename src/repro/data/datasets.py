@@ -35,8 +35,12 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from repro.data.federated import scaled_fleet, sybil_fleet, table2_fleet
-from repro.data.scenarios import make_scenario
+from repro.data.scenarios import make_scenario, plan_sizes
 from repro.data.sources import ArraySource, get_source
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 @dataclass
@@ -82,6 +86,140 @@ class FederatedDataset:
         if self.round_mask is not None:
             out["round_mask"] = self.round_mask
         return out
+
+    # ------------------------------------------------------------------
+    def client_extents(self) -> np.ndarray:
+        """(N,) highest valid sample position + 1 per client (the width the
+        packed layout must preserve).  Dense (maskless) fleets use the full
+        rectangle; masked fleets use the mask's true extent (real samples
+        are a prefix, but this is robust to any layout)."""
+        if self.mask is None:
+            return np.full(self.num_clients, self.samples, np.int64)
+        live = self.mask
+        if self.round_mask is not None:
+            live = live | self.round_mask.any(axis=0)
+        rev = live[:, ::-1]
+        extent = self.samples - rev.argmax(axis=1)
+        return np.where(live.any(axis=1), extent, 1).astype(np.int64)
+
+    def packed_arrays(self, shards: int = 1, min_width: int = 16,
+                      quantum: Optional[int] = None) -> dict:
+        """The padding-free engine layout: clients sorted into power-of-two
+        length buckets (pad-to-bucket, not pad-to-max), so per-round local-
+        SGD compute tracks ~2x the real sample volume instead of N * n_max.
+
+        Layout contract (consumed by ``FedAREngine``):
+
+        * each bucket ``b`` holds rectangular ``x``/``y``/``mask`` arrays of
+          shape ``(rows_b, L_b[, dim])`` with ``L_b`` a power of two (capped
+          at the stored rectangle width);
+        * ``perm`` (rows_b,) int32 maps each packed row to its canonical
+          client index *within its mesh shard block*, so every ``(N,)``
+          bookkeeping vector (trust, battery, selection, defense history)
+          stays in canonical client order; ``inv`` (N,) is the inverse —
+          canonical client -> row in the shard-local concatenation of the
+          bucket blocks — which lets the engine restore canonical delta
+          order with ONE gather instead of a per-bucket scatter chain;
+        * buckets narrower than ``min_width`` are merged up (a client
+          below one SGD batch costs a full batch-grad either way, so
+          splitting them only multiplies dispatch overhead);
+        * with ``quantum`` set to the engine's local batch size, widths are
+          powers of two in BATCH units (quantum * next_pow2(ceil(n_u /
+          quantum))) — local SGD's ceil-batching makes the batch-grad
+          count, not the sample count, the true cost unit, and sample-pow2
+          widths can still double it (a 33-sample client in a 64-wide
+          bucket pays 4 batches of 20 instead of 2);
+        * ``valid`` marks real rows; buckets are laid out shard-major with
+          per-shard row counts equalized across shards (dummy rows carry an
+          all-False mask, so their local-SGD delta is exactly zero), which
+          is what lets ``PartitionSpec(clients)`` shard each bucket's row
+          axis directly.  ``shards`` must therefore match the engine's
+          ``mesh_shape`` (1 for the single-device path).
+
+        ``sizes`` keeps the true n_u aggregation weights and ``n_max`` the
+        dense rectangle width (the virtual-latency model's FLOP count must
+        not change with the physical layout, or packed and pad-to-max runs
+        would select different stragglers)."""
+        N, n = self.num_clients, self.samples
+        if shards < 1 or N % shards:
+            raise ValueError(
+                f"packed_arrays: num_clients={N} not divisible into "
+                f"{shards} shards"
+            )
+        blk = N // shards
+        extent = self.client_extents()
+        if quantum:
+            raw = [
+                quantum * _next_pow2(-(-int(e) // quantum)) for e in extent
+            ]
+        else:
+            raw = [_next_pow2(e) for e in extent]
+        width = np.minimum([max(w, min_width) for w in raw], n).astype(int)
+        widths = sorted(set(width.tolist()))
+        dim = self.x.shape[2]
+        W = self.windows
+        ids = {
+            L: [
+                [i for i in range(s * blk, (s + 1) * blk) if width[i] == L]
+                for s in range(shards)
+            ]
+            for L in widths
+        }
+        caps = {L: max(len(lst) for lst in ids[L]) for L in widths}
+        # canonical client -> row in the shard-local concat of bucket blocks
+        offsets = np.cumsum([0] + [caps[L] for L in widths[:-1]])
+        inv = np.zeros((N,), np.int32)
+        for bi, L in enumerate(widths):
+            for s in range(shards):
+                for j, cid in enumerate(ids[L][s]):
+                    inv[cid] = offsets[bi] + j
+        px, py, pm, pperm, pvalid, pact, prm = [], [], [], [], [], [], []
+        for L in widths:
+            rows = shards * caps[L]
+            xb = np.zeros((rows, L, dim), np.float32)
+            yb = np.zeros((rows, L), np.int32)
+            mb = np.zeros((rows, L), bool)
+            perm = np.zeros((rows,), np.int32)
+            valid = np.zeros((rows,), bool)
+            act = np.zeros((rows,), np.int32)
+            rmb = np.zeros((W, rows, L), bool) if W else None
+            for s in range(shards):
+                for j, cid in enumerate(ids[L][s]):
+                    r = s * caps[L] + j
+                    xb[r] = self.x[cid, :L]
+                    yb[r] = self.y[cid, :L]
+                    mb[r] = True if self.mask is None else self.mask[cid, :L]
+                    if rmb is not None:
+                        rmb[:, r] = self.round_mask[:, cid, :L]
+                    perm[r] = cid - s * blk
+                    valid[r] = True
+                    act[r] = self.activations[cid]
+            px.append(xb)
+            py.append(yb)
+            pm.append(mb)
+            pperm.append(perm)
+            pvalid.append(valid)
+            pact.append(act)
+            if rmb is not None:
+                prm.append(rmb)
+        packed = {
+            "x": tuple(px),
+            "y": tuple(py),
+            "mask": tuple(pm),
+            "perm": tuple(pperm),
+            "valid": tuple(pvalid),
+            "act": tuple(pact),
+            "inv": inv,
+            "n_max": np.float32(n),
+            "shards": np.int32(shards),
+        }
+        if prm:
+            packed["round_mask"] = tuple(prm)
+        return {
+            "sizes": self.sizes,
+            "activations": self.activations,
+            "packed": packed,
+        }
 
 
 BUILDERS: Dict[str, Callable] = {}
@@ -175,8 +313,8 @@ def _assemble(name, scenario, px, py, plan, num_clients, *, seed,
               fallback, num_classes, meta):
     """Turn a ragged ScenarioPlan over pool arrays into rectangular padded
     shards with validity masks (and the drift round_mask schedule)."""
-    counts = [len(ci) for ci in plan.client_indices]
-    n_max = max(1, max(counts, default=0))
+    counts = plan_sizes(plan)
+    n_max = max(1, int(counts.max(initial=0)))
     dim = px.shape[1]
     x = np.zeros((num_clients, n_max, dim), np.float32)
     y = np.zeros((num_clients, n_max), np.int32)

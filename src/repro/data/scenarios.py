@@ -45,6 +45,29 @@ class ScenarioPlan(NamedTuple):
     window_indices: Optional[List[List[np.ndarray]]] = None
 
 
+def plan_sizes(plan: ScenarioPlan) -> np.ndarray:
+    """Per-client true sample counts of a plan — the n_u the dataset layer
+    pads (and the packed layout buckets) around."""
+    return np.asarray([len(ci) for ci in plan.client_indices], np.int64)
+
+
+def padding_waste(counts, n_max: Optional[int] = None) -> dict:
+    """Padded-compute diagnostics for a set of client sizes: the ratio of
+    padded to real samples under pad-to-max vs power-of-two bucketing.
+    ``pad_to_max`` is what the rectangular (N, n_max) layout costs (the
+    ~n_max/mean blow-up quantity_skew pays); ``bucketed`` is bounded by 2x
+    because next_pow2(n) < 2n."""
+    counts = np.maximum(np.asarray(counts, np.int64), 1)
+    if n_max is None:
+        n_max = int(counts.max())
+    total = int(counts.sum())
+    widths = np.minimum(2 ** np.ceil(np.log2(counts)).astype(np.int64), n_max)
+    return {
+        "pad_to_max": len(counts) * n_max / total,
+        "bucketed": int(widths.sum()) / total,
+    }
+
+
 SCENARIOS: Dict[str, Callable] = {}
 
 

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: fused masked local SGD for the FedAR client MLP.
+
+ClientUpdate (Algorithm 2 lines 16-21) is the engine's FLOP-dominant op:
+every selected client runs E epochs of batch SGD on its local shard.  The
+XLA path vmaps a ``lax.scan`` of ``jax.grad`` steps — each batch step
+round-trips the full parameter set through HBM.  This kernel fuses the
+whole per-client loop (epochs x batches of forward + backward + SGD update)
+into ONE ``pallas_call``: the grid walks the client rows of a (bucketed)
+cohort block, each grid step streams that client's sample slab HBM->VMEM
+once, keeps the evolving parameters resident in the output VMEM tiles, and
+iterates every batch against them — zero parameter traffic between steps.
+
+Masked tiles are skipped: a batch whose validity-mask count is zero (the
+pad-to-bucket tail of a packed shard, or a dummy mesh-fill row) is an exact
+no-op on the XLA path (the masked loss renormalizes to zero gradient), so
+``pl.when`` guards the entire batch body and the kernel pays nothing for
+padding — the residual <=2x pad-to-bucket waste of the packed layout
+becomes pure skipped tiles here.
+
+The backward pass is written out by hand (softmax cross-entropy through the
+Table II per-robot hidden activation, ReLU or Softmax) and matches
+``jax.grad`` of ``models.mnist.mnist_loss`` — pinned against the pure-jnp
+oracle ``kernels.ref.local_sgd_ref`` and ``models.mnist.local_sgd`` in the
+kernel tests.  Routed via ``FedConfig.sgd_impl`` (auto = kernel on TPU,
+XLA vmap elsewhere).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def fused_fits_vmem(n: int, input_dim: int, hidden: int, classes: int,
+                    budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Whether one client's working set — the (n, input_dim) sample slab,
+    the in/out parameter tiles and the per-batch temporaries — fits the
+    per-grid-step VMEM budget.  The engine falls back to the XLA vmap path
+    when a (very wide) bucket would not fit."""
+    slab = n * input_dim + 2 * n
+    params = 2 * (input_dim * hidden + hidden + hidden * classes + classes)
+    grads = input_dim * hidden + hidden * classes
+    return 4 * (slab + params + grads) <= budget
+
+
+def _sgd_kernel(act_ref, x_ref, y_ref, m_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                w1o, b1o, w2o, b2o, *, lr, nb, epochs, batch):
+    # one grid step == one client: params live in the output VMEM tiles and
+    # are updated in place across every batch of every epoch
+    w1o[0] = w1_ref[...]
+    b1o[...] = b1_ref[...]
+    w2o[0] = w2_ref[...]
+    b2o[...] = b2_ref[...]
+    is_soft = act_ref[0, 0] == 1
+
+    def step(t, carry):
+        b = jax.lax.rem(t, nb)
+        start = b * batch
+        xb = x_ref[0, pl.ds(start, batch), :]  # (B, I)
+        yb = y_ref[0, pl.ds(start, batch)]  # (B,)
+        mb = m_ref[0, pl.ds(start, batch)]  # (B,) float validity
+        cnt = jnp.sum(mb)
+
+        # masked tile skip: an all-padding batch is an exact no-op (the
+        # masked loss renormalizes to zero gradient), so don't compute it
+        @pl.when(cnt > 0.0)
+        def _():
+            w1, b1 = w1o[0], b1o[0]
+            w2, b2 = w2o[0], b2o[0]
+            hpre = jax.lax.dot_general(
+                xb, w1, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) + b1[None, :]
+            h = jnp.where(
+                is_soft, jax.nn.softmax(hpre, axis=-1),
+                jnp.maximum(hpre, 0.0),
+            )
+            logits = jax.lax.dot_general(
+                h, w2, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) + b2[None, :]
+            # d(masked CE)/d(logits) = (softmax - onehot) * m / sum(m)
+            p = jax.nn.softmax(logits, axis=-1)
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            onehot = (col == yb[:, None]).astype(jnp.float32)
+            gl = (p - onehot) * (mb / jnp.maximum(cnt, 1.0))[:, None]
+            dw2 = jax.lax.dot_general(
+                h, gl, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            db2 = jnp.sum(gl, axis=0)
+            dh = jax.lax.dot_general(
+                gl, w2, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            # back through the Table II hidden activation
+            dsoft = h * (dh - jnp.sum(dh * h, axis=-1, keepdims=True))
+            drelu = dh * (hpre > 0.0)
+            dhp = jnp.where(is_soft, dsoft, drelu)
+            dw1 = jax.lax.dot_general(
+                xb, dhp, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            db1 = jnp.sum(dhp, axis=0)
+            w1o[0] = w1 - lr * dw1
+            b1o[0] = b1 - lr * db1
+            w2o[0] = w2 - lr * dw2
+            b2o[0] = b2 - lr * db2
+
+        return carry
+
+    jax.lax.fori_loop(0, epochs * nb, step, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "batch_size", "epochs", "interpret")
+)
+def local_sgd_fused(w1, b1, w2, b2, x, y, act, mask, *, lr: float,
+                    batch_size: int, epochs: int, interpret: bool = False):
+    """Fused local SGD over a block of clients.
+
+    w1 (I, H), b1 (H,), w2 (H, C), b2 (C,): the shared global model.
+    x (R, n, I) float; y (R, n) int; act (R,) int (0=relu, 1=softmax);
+    mask (R, n) bool/float validity (padding contributes zero gradient,
+    all-padding batches are skipped tiles).
+
+    Returns ``{"w1": (R, I, H), "b1": (R, H), "w2": (R, H, C),
+    "b2": (R, C)}`` — each client's post-SGD parameters, fp32.  The sample
+    axis is zero-padded up to a whole number of batches (mask-False, so the
+    tail never trains), matching the masked XLA path's ceil batching."""
+    R, n, inp = x.shape
+    hid = w1.shape[1]
+    classes = w2.shape[1]
+    nb = -(-n // batch_size)  # ceil: never drop real samples
+    pad = nb * batch_size - n
+    mask = mask.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    npad = nb * batch_size
+    kernel = functools.partial(
+        _sgd_kernel, lr=lr, nb=nb, epochs=epochs, batch=batch_size
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, npad, inp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (i, 0)),
+            pl.BlockSpec((1, npad), lambda i: (i, 0)),
+            pl.BlockSpec((inp, hid), lambda i: (0, 0)),
+            pl.BlockSpec((1, hid), lambda i: (0, 0)),
+            pl.BlockSpec((hid, classes), lambda i: (0, 0)),
+            pl.BlockSpec((1, classes), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, inp, hid), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hid), lambda i: (i, 0)),
+            pl.BlockSpec((1, hid, classes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, classes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, inp, hid), jnp.float32),
+            jax.ShapeDtypeStruct((R, hid), jnp.float32),
+            jax.ShapeDtypeStruct((R, hid, classes), jnp.float32),
+            jax.ShapeDtypeStruct((R, classes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        act.astype(jnp.int32).reshape(R, 1),
+        x.astype(jnp.float32),
+        y.astype(jnp.int32),
+        mask,
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32).reshape(1, hid),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32).reshape(1, classes),
+    )
+    return {"w1": outs[0], "b1": outs[1], "w2": outs[2], "b2": outs[3]}

@@ -7,11 +7,14 @@ TPU deployments take the kernels.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.kernels import ref
 from repro.kernels.fedavg_agg import fedavg_agg as _fedavg_agg_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.local_sgd import local_sgd_fused as _local_sgd_kernel
 from repro.kernels.ssm_scan import ssm_scan as _ssm_kernel
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -22,6 +25,25 @@ def fedavg_agg(deltas, weights, *, use_pallas: bool = True, interpret: bool | No
         return ref.fedavg_agg_ref(deltas, weights)
     itp = (not _ON_TPU) if interpret is None else interpret
     return _fedavg_agg_kernel(deltas, weights, interpret=itp)
+
+
+def local_sgd(w1, b1, w2, b2, x, y, act, mask, *, lr: float, batch_size: int,
+              epochs: int, use_pallas: bool = True,
+              interpret: bool | None = None):
+    """Fused per-client local SGD over a block of clients (the FedAR
+    ClientUpdate hot path); ``use_pallas=False`` vmaps the pure-jnp oracle."""
+    if not use_pallas:
+        one = functools.partial(
+            ref.local_sgd_ref, lr=lr, batch_size=batch_size, epochs=epochs
+        )
+        return jax.vmap(
+            lambda xi, yi, ai, mi: one(w1, b1, w2, b2, xi, yi, ai, mi)
+        )(x, y, act, mask)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _local_sgd_kernel(
+        w1, b1, w2, b2, x, y, act, mask, lr=lr, batch_size=batch_size,
+        epochs=epochs, interpret=itp,
+    )
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, use_pallas: bool = True,

@@ -14,6 +14,45 @@ def fedavg_agg_ref(deltas, weights, staleness=None):
     return jnp.einsum("n,nd->d", w, deltas.astype(jnp.float32))
 
 
+def local_sgd_ref(w1, b1, w2, b2, x, y, act, mask, *, lr: float,
+                  batch_size: int, epochs: int):
+    """One client's masked local SGD (the fused-kernel oracle): E epochs of
+    batch SGD via ``jax.grad`` of the masked softmax cross-entropy through
+    the Table II hidden activation.  x (n, I), y (n,), mask (n,), act a
+    scalar int (0=relu, 1=softmax).  Returns the post-SGD params dict."""
+
+    def loss(params, xb, yb, mb):
+        w1, b1, w2, b2 = params
+        h = xb @ w1 + b1
+        h = jnp.where(
+            jnp.asarray(act) == 1, jax.nn.softmax(h, axis=-1),
+            jnp.maximum(h, 0.0),
+        )
+        lg = h @ w2 + b2
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, yb[:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * mb) / jnp.maximum(jnp.sum(mb), 1.0)
+
+    n = x.shape[0]
+    nb = -(-n // batch_size)
+    pad = nb * batch_size - n
+    x = jnp.pad(x.astype(jnp.float32), ((0, pad), (0, 0)))
+    y = jnp.pad(y.astype(jnp.int32), ((0, pad),))
+    m = jnp.pad(mask.astype(jnp.float32), ((0, pad),))
+    params = (
+        w1.astype(jnp.float32), b1.astype(jnp.float32),
+        w2.astype(jnp.float32), b2.astype(jnp.float32),
+    )
+    grad = jax.grad(loss)
+    for _ in range(epochs):
+        for b in range(nb):
+            sl = slice(b * batch_size, (b + 1) * batch_size)
+            g = grad(params, x[sl], y[sl], m[sl])
+            params = tuple(p - lr * gg for p, gg in zip(params, g))
+    return {"w1": params[0], "b1": params[1], "w2": params[2],
+            "b2": params[3]}
+
+
 def sketch_similarity_ref(unit_loc, unit_full):
     """Defense similarity block: (M, K) @ (N, K).T -> (M, N) float32."""
     return jnp.einsum(

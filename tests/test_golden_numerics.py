@@ -91,6 +91,73 @@ def test_golden_sharded():
     _assert_golden(state)
 
 
+# --- gated + bucketed hot path: its own pinned trajectory ----------------
+# N=12 digits/quantity_skew (seed 7, 60 samples/client), 5 rounds of fedar +
+# foolsgold_sketch with select_frac=0.5 over the packed (quantum=20) layout.
+GATED_SUM = 92.49541523193693
+GATED_L2 = 10.314037802900431
+GATED_PROBES = np.array([
+    -0.013791415840387344, -0.061055414378643036, 0.06815582513809204,
+    0.042934220284223557, 0.04195379838347435, 0.11835479736328125,
+    -0.10140914469957352, 0.046867094933986664,
+])
+GATED_TRUST = np.array(
+    [90.0, 55.0, 55.0, 55.0, 90.0, 90.0, 90.0, 90.0, 50.0, 50.0, 90.0, 55.0]
+)
+GATED_FG_L2 = 8.843296871281623
+
+
+def _run_gated_packed(mesh_shape=None):
+    fed = fleet_fed(12, defense="foolsgold_sketch", select_frac=0.5,
+                    mesh_shape=mesh_shape)
+    engine = FedAREngine(small_model(32), fed, TaskRequirement())
+    ds = make_federated("digits", 12, scenario="quantity_skew",
+                        samples_per_client=60, seed=7)
+    data = jax.tree.map(
+        jnp.asarray,
+        ds.packed_arrays(shards=mesh_shape or 1, quantum=20),
+    )
+    state, _ = engine.run(engine.init_state(), data, rounds=ROUNDS)
+    return engine, state
+
+
+def _assert_gated_golden(state):
+    p = np.asarray(state.params, np.float64)
+    assert p.size == GOLDEN_DIM
+    np.testing.assert_allclose(p.sum(), GATED_SUM, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        np.linalg.norm(p), GATED_L2, rtol=RTOL, atol=ATOL
+    )
+    probes = p[:: p.size // 8][:8]
+    np.testing.assert_allclose(probes, GATED_PROBES, rtol=RTOL, atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(state.trust.score), GATED_TRUST)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(state.fg_history, np.float64)),
+        GATED_FG_L2, rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_golden_gated_packed_single_device():
+    """The selection-gated + bucketed hot path is pinned on its own
+    committed checksums (the default-path goldens above must stay
+    untouched by the packed/gated machinery)."""
+    _, state = _run_gated_packed()
+    _assert_gated_golden(state)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < SHARDS,
+    reason=f"needs {SHARDS} devices "
+    f"(XLA_FLAGS=--xla_force_host_platform_device_count={SHARDS})",
+)
+def test_golden_gated_packed_sharded():
+    """Gated + bucketed on the 4-shard mesh (shard-major packed layout)
+    lands on the SAME pinned checksums within fp32 reduction tolerance."""
+    engine, state = _run_gated_packed(mesh_shape=SHARDS)
+    assert engine.mesh is not None and engine.mesh.devices.size == SHARDS
+    _assert_gated_golden(state)
+
+
 def test_golden_is_data_layer_independent_of_registry_path():
     """The registry builder and the raw ``table2_fleet`` constructor feed
     the engine bit-identical arrays — the golden pins BOTH entry points."""

@@ -10,6 +10,7 @@ from repro.kernels import ref
 from repro.kernels.defense_sim import sketch_similarity
 from repro.kernels.fedavg_agg import fedavg_agg
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.local_sgd import fused_fits_vmem, local_sgd_fused
 from repro.kernels.ssm_scan import ssm_scan
 
 
@@ -109,6 +110,97 @@ def test_fedavg_agg_staleness_decay(N, D, block):
                       block_d=block)
     np.testing.assert_allclose(got0, ref.fedavg_agg_ref(deltas, w),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused local SGD
+# ---------------------------------------------------------------------------
+
+def _mlp(key, inp=16, hid=8, classes=10):
+    k1, k2 = jax.random.split(key)
+    return (jax.random.normal(k1, (inp, hid)) * 0.3, jnp.zeros((hid,)),
+            jax.random.normal(k2, (hid, classes)) * 0.3, jnp.zeros((classes,)))
+
+
+@pytest.mark.parametrize("act", [0, 1])
+@pytest.mark.parametrize("n,bs,epochs", [(40, 20, 2), (37, 10, 3), (8, 20, 1)])
+def test_local_sgd_fused_matches_oracle_and_model(act, n, bs, epochs):
+    """The hand-written fused backward pass == jax.grad (the ref oracle AND
+    models.mnist.local_sgd), per Table II activation, ragged tails incl."""
+    from repro.models.mnist import local_sgd as model_sgd
+
+    w1, b1, w2, b2 = _mlp(jax.random.PRNGKey(act * 7 + n))
+    k = jax.random.PRNGKey(n + bs)
+    R = 3
+    x = jax.random.normal(jax.random.fold_in(k, 0), (R, n, 16))
+    y = jax.random.randint(jax.random.fold_in(k, 1), (R, n), 0, 10)
+    acts = jnp.full((R,), act, jnp.int32)
+    # ragged: full, partial, and tiny shards
+    n_u = jnp.array([n, max(1, n // 2), 1])[:R]
+    mask = jnp.arange(n)[None, :] < n_u[:, None]
+    got = local_sgd_fused(w1, b1, w2, b2, x, y, acts, mask, lr=0.1,
+                          batch_size=bs, epochs=epochs, interpret=True)
+    for i in range(R):
+        want = ref.local_sgd_ref(w1, b1, w2, b2, x[i], y[i], acts[i],
+                                 mask[i], lr=0.1, batch_size=bs,
+                                 epochs=epochs)
+        model = model_sgd(
+            {"w1": w1, "b1": b1, "w2": w2, "b2": b2}, x[i], y[i], lr=0.1,
+            batch_size=bs, epochs=epochs, activation=acts[i],
+            sample_mask=mask[i],
+        )
+        for kk in ("w1", "b1", "w2", "b2"):
+            np.testing.assert_allclose(got[kk][i], want[kk], rtol=1e-5,
+                                       atol=1e-5)
+            np.testing.assert_allclose(got[kk][i], model[kk], rtol=1e-5,
+                                       atol=1e-5)
+
+
+def test_local_sgd_fused_all_masked_is_noop():
+    """A fully-masked client (dummy mesh-fill row / empty shard) must come
+    back with the global params untouched — its delta is exactly zero."""
+    w1, b1, w2, b2 = _mlp(jax.random.PRNGKey(3))
+    k = jax.random.PRNGKey(9)
+    x = jax.random.normal(k, (1, 24, 16))
+    y = jnp.zeros((1, 24), jnp.int32)
+    got = local_sgd_fused(w1, b1, w2, b2, x, y, jnp.zeros((1,), jnp.int32),
+                          jnp.zeros((1, 24), bool), lr=0.1, batch_size=20,
+                          epochs=2, interpret=True)
+    np.testing.assert_array_equal(got["w1"][0], w1)
+    np.testing.assert_array_equal(got["b1"][0], b1)
+    np.testing.assert_array_equal(got["w2"][0], w2)
+    np.testing.assert_array_equal(got["b2"][0], b2)
+
+
+def test_local_sgd_fused_dense_equals_unmasked_model_path():
+    """With an all-True mask and batch-aligned n, the kernel matches the
+    dense (maskless) model path — the masked renormalization degenerates to
+    the plain batch mean."""
+    from repro.models.mnist import local_sgd as model_sgd
+
+    w1, b1, w2, b2 = _mlp(jax.random.PRNGKey(5))
+    k = jax.random.PRNGKey(6)
+    x = jax.random.normal(k, (2, 40, 16))
+    y = jax.random.randint(jax.random.fold_in(k, 1), (2, 40), 0, 10)
+    acts = jnp.array([0, 1], jnp.int32)
+    got = local_sgd_fused(w1, b1, w2, b2, x, y, acts,
+                          jnp.ones((2, 40), bool), lr=0.05, batch_size=20,
+                          epochs=2, interpret=True)
+    for i in range(2):
+        dense = model_sgd(
+            {"w1": w1, "b1": b1, "w2": w2, "b2": b2}, x[i], y[i], lr=0.05,
+            batch_size=20, epochs=2, activation=acts[i],
+        )
+        for kk in ("w1", "b1", "w2", "b2"):
+            np.testing.assert_allclose(got[kk][i], dense[kk], rtol=1e-5,
+                                       atol=1e-5)
+
+
+def test_fused_fits_vmem_bounds():
+    """The VMEM estimate admits the paper's model at bucket widths and
+    rejects slabs that cannot fit."""
+    assert fused_fits_vmem(512, 784, 128, 10)
+    assert not fused_fits_vmem(65536, 784, 128, 10)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,115 @@
+"""The CI perf gate's comparison logic (benchmarks/perf_gate.py):
+regressions beyond tolerance fail, jitter within the band passes, schema
+migrations (legacy float leaves vs the dict schema) and axis churn are
+handled without false alarms."""
+from benchmarks.perf_gate import compare, iter_axes
+
+BASE = {
+    "rounds_per_sec": {
+        "128": {"python_rounds_per_sec": 3.0, "scan_rounds_per_sec": 60.0,
+                "speedup": 20.0, "scan_compile_sec": 1.0},
+    },
+    "scenario_rounds_per_sec": {
+        "128": {"iid": 80.0, "quantity_skew": 12.0},
+    },
+    "sharded_rounds_per_sec_by_devices": {
+        "1": {"128": 70.0},
+    },
+}
+
+
+def _fresh(scale=1.0, skew=None):
+    return {
+        "rounds_per_sec": {
+            "128": {"python_rounds_per_sec": 3.0 * scale,
+                    "scan_rounds_per_sec": 60.0 * scale, "speedup": 20.0},
+        },
+        "scenario_rounds_per_sec": {
+            "128": {
+                "iid": {"rounds_per_sec": 80.0 * scale, "compile_sec": 2.0},
+                "quantity_skew": {
+                    "rounds_per_sec": (skew if skew is not None
+                                       else 12.0 * scale),
+                    "compile_sec": 2.0,
+                },
+                "robot_drift": {"rounds_per_sec": 50.0},  # new axis: ignored
+            },
+        },
+        "sharded_rounds_per_sec_by_devices": {
+            "1": {"128": {"rounds_per_sec": 70.0 * scale}},
+        },
+        "gated_rounds_per_sec": {  # whole new axis: ignored
+            "128": {"full": {"rounds_per_sec": 60.0}},
+        },
+    }
+
+
+def test_within_tolerance_passes():
+    failures, checked, missing, _ = compare(BASE, _fresh(scale=0.8), 0.30)
+    assert not failures
+    assert checked == 5
+    assert not missing
+
+
+def test_regression_fails():
+    failures, _, _, _ = compare(BASE, _fresh(skew=5.0), 0.30)
+    assert [f[0] for f in failures] == [
+        "scenario_rounds_per_sec/128/quantity_skew"
+    ]
+
+
+def test_slow_runner_is_calibrated_out():
+    """A uniformly ~2x-slower machine must NOT trip the gate (the median
+    fresh/baseline ratio calibrates the floor, down to 1 - 2*tol), but a
+    single axis falling far below the machine ratio still does."""
+    failures, _, _, calibration = compare(BASE, _fresh(scale=0.5), 0.30)
+    assert not failures
+    assert abs(calibration - 0.5) < 1e-9
+    failures, _, _, _ = compare(BASE, _fresh(scale=0.5, skew=2.0), 0.30)
+    assert [f[0] for f in failures] == [
+        "scenario_rounds_per_sec/128/quantity_skew"
+    ]
+    # --absolute restores the raw comparison
+    failures, _, _, calibration = compare(BASE, _fresh(scale=0.5), 0.30,
+                                          normalize=False)
+    assert calibration == 1.0 and len(failures) == 5
+
+
+def test_uniform_collapse_still_fails():
+    """Calibration is floored at 1 - 2*tol: a regression broad enough to
+    move EVERY axis (a slowdown in the shared round body) cannot hide
+    behind the machine-speed ratio forever — below (1-tol)*(1-2*tol) of
+    baseline the gate fires even though all axes moved together."""
+    failures, checked, _, calibration = compare(BASE, _fresh(scale=0.25),
+                                                0.30)
+    assert abs(calibration - 0.4) < 1e-9  # floored, not 0.25
+    assert len(failures) == checked == 5
+
+
+def test_fast_runner_cannot_hide_regression():
+    """Calibration is capped at 1: a 2x-faster machine with one axis 50%
+    down in absolute terms still fails that axis."""
+    failures, _, _, calibration = compare(BASE, _fresh(scale=2.0, skew=6.0),
+                                          0.30)
+    assert calibration == 1.0
+    assert [f[0] for f in failures] == [
+        "scenario_rounds_per_sec/128/quantity_skew"
+    ]
+
+
+def test_missing_axis_reported_not_failed():
+    fresh = _fresh()
+    del fresh["sharded_rounds_per_sec_by_devices"]
+    failures, checked, missing, _ = compare(BASE, fresh, 0.30)
+    assert not failures
+    assert checked == 4
+    assert missing == ["sharded_rounds_per_sec_by_devices/1/128"]
+
+
+def test_legacy_float_leaves_are_readable():
+    axes = dict(iter_axes(BASE))
+    assert axes["scenario_rounds_per_sec/128/iid"] == 80.0
+    axes_new = dict(iter_axes(_fresh()))
+    assert axes_new["scenario_rounds_per_sec/128/iid"] == 80.0
+    # non-throughput keys never leak into the comparison
+    assert all("speedup" not in k and "compile" not in k for k in axes)
