@@ -25,6 +25,10 @@ padding-free hot path), at an equal per-client sample budget; ``dense``
 keeps the legacy wrap-padded fleet as the baseline.  The ``gated`` axis
 prices selection-gated local SGD (``FedConfig.select_frac``): the engine
 vmaps only the statically-capped selected cohort instead of all N clients.
+The ``model_family`` axis runs the same scan engine per client family — the
+paper's MNIST MLP vs a reduced transformer LM behind the ``ClientModel``
+boundary — so the gate also covers the pytree flatten/unflatten aggregation
+path.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
@@ -65,6 +69,7 @@ QUICK_SCENARIO_SIZES = (128,)
 GATED_SIZES = (128, 512)
 QUICK_GATED_SIZES = (128,)
 GATED_FRAC = 0.5  # = client_fraction: cohort exactly covers the selection
+MODEL_FAMILY_SIZES = (12,)
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 QUICK_REPEATS = 3  # repeat-median absorbs CI runner jitter
 FULL_REPEATS = 2
@@ -201,6 +206,37 @@ def bench_gated(quick: bool = False) -> dict:
     return out
 
 
+def bench_model_family(quick: bool = False) -> dict:
+    """rounds/sec of the scan engine per client-model family: the paper's
+    MNIST MLP vs a reduced transformer LM behind the same ``ClientModel``
+    boundary — the perf gate covers the pytree flatten/unflatten
+    aggregation path, not just the flat MLP hot path."""
+    from repro.configs import get_config
+    from repro.data.pipeline import federated_lm_corpus
+    from repro.models.model import LMClientModel
+
+    out = {}
+    for n in MODEL_FAMILY_SIZES:
+        out[str(n)] = {}
+        engine, data = _make(n)
+        out[str(n)]["mnist_mlp"] = _time_scan(engine, data, rounds=4,
+                                              repeats=_repeats(quick))
+        cfg = get_config("tinyllama-1.1b").reduced(
+            num_layers=1, d_model=64, d_ff=128, vocab_size=128,
+            num_heads=2, num_kv_heads=1,
+        )
+        fed = fleet_fed(n, local_epochs=1, local_batch_size=4,
+                        defense="none")
+        lm_engine = FedAREngine(LMClientModel(cfg), fed, TaskRequirement())
+        raw, _meta = federated_lm_corpus(
+            n, vocab=cfg.vocab_size, seq=32, samples_per_client=8, topics=4
+        )
+        lm_data = jax.tree.map(jnp.asarray, raw)
+        out[str(n)]["lm"] = _time_scan(lm_engine, lm_data, rounds=4,
+                                       repeats=_repeats(quick))
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -243,7 +279,8 @@ def bench_gated_packed(quick: bool = False) -> dict:
 
 
 def write_json(summary, devices=None, defense=None, scenario=None,
-               gated=None, path: str = "BENCH_engine.json") -> None:
+               gated=None, model_family=None,
+               path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
         payload["sharded_rounds_per_sec_by_devices"] = devices
@@ -253,6 +290,8 @@ def write_json(summary, devices=None, defense=None, scenario=None,
         payload["scenario_rounds_per_sec"] = scenario
     if gated is not None:
         payload["gated_rounds_per_sec"] = gated
+    if model_family is not None:
+        payload["model_family_rounds_per_sec"] = model_family
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -290,7 +329,8 @@ def main() -> None:
     gated = bench_gated(quick=quick)
     for n, modes in bench_gated_packed(quick=quick).items():
         gated.setdefault(n, {}).update(modes)
-    write_json(summary, devices, defense, scenario, gated)
+    family = bench_model_family(quick=quick)
+    write_json(summary, devices, defense, scenario, gated, family)
     for k, per_n in devices.items():
         for n, v in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / _rps(v), 1),
@@ -306,6 +346,10 @@ def main() -> None:
     for n, per_g in gated.items():
         for g, v in per_g.items():
             rows.append((f"engine_scan_N{n}_sgd_{g}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
+    for n, per_f in family.items():
+        for fam, v in per_f.items():
+            rows.append((f"engine_scan_N{n}_model_{fam}",
                          round(1e6 / _rps(v), 1), round(_rps(v), 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

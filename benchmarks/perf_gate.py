@@ -55,7 +55,8 @@ def iter_axes(payload: dict) -> Iterator[Tuple[str, float]]:
                 if key in entry:
                     yield f"rounds_per_sec/{n}/{key}", float(entry[key])
     for axis in ("sharded_rounds_per_sec_by_devices", "defense_rounds_per_sec",
-                 "scenario_rounds_per_sec", "gated_rounds_per_sec"):
+                 "scenario_rounds_per_sec", "gated_rounds_per_sec",
+                 "model_family_rounds_per_sec"):
         for outer, inner in payload.get(axis, {}).items():
             if not isinstance(inner, dict):
                 continue

@@ -73,11 +73,9 @@ def main():
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import FedARServer, TaskRequirement, make_federated
     from repro.configs.fedar_mnist import MnistConfig, fleet_fed
-    from repro.core.fedar import FedARServer
-    from repro.core.resources import TaskRequirement
-    from repro.data.datasets import make_federated
-    from repro.data.sources import eval_source, get_source
+    from repro.data.sources import eval_source
 
     name = args.dataset
     if name == "auto":

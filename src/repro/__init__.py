@@ -1,0 +1,51 @@
+"""Public API facade for the FedAR reproduction.
+
+One stable import surface for the pieces every workload touches:
+
+    from repro import FedConfig, FedAREngine, FedARServer, make_federated
+
+``FedAREngine`` is the fully-jitted round engine (``lax.scan`` over
+communication rounds, optionally ``shard_map``-sharded over a ``clients``
+mesh); ``FedARServer`` is the thin host-side wrapper that keeps the seed's
+``run``/``history`` API.  Client workloads plug in behind the
+:class:`ClientModel` protocol — ``MnistClientModel`` is the paper's MLP,
+``LMClientModel`` wraps the transformer substrate — and ``make_federated``
+builds non-IID client shards from the dataset registry.
+
+Exports resolve lazily (PEP 562): ``import repro`` must NOT initialize jax,
+because launchers like ``repro.launch.dryrun`` set device-count XLA flags
+as their first statement — and importing the package is the first thing
+``python -m repro.launch.dryrun`` does.  Deep imports
+(``repro.core.engine``, ``repro.data.datasets``, ...) keep working; this
+module only re-exports.
+"""
+import importlib
+
+_EXPORTS = {
+    "ClientModel": "repro.models.client",
+    "FedAREngine": "repro.core.engine",
+    "FedARServer": "repro.core.fedar",
+    "FedConfig": "repro.common.config",
+    "LMClientModel": "repro.models.model",
+    "MnistClientModel": "repro.models.mnist",
+    "TaskRequirement": "repro.core.resources",
+    "make_federated": "repro.data.datasets",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: resolve each export once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.common.config import FedConfig
 from repro.core.distributed import ClientComms
 from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.ops import resolve_impl
 
 _IDENTITY = ClientComms()
 
@@ -89,12 +90,6 @@ def deviation_mask(
     return active & (dist > mu + gamma * sd)
 
 
-def _resolve_impl(impl: str) -> str:
-    if impl == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "einsum"
-    return impl
-
-
 def fedavg_aggregate(
     global_flat,
     deltas,
@@ -136,7 +131,7 @@ def fedavg_aggregate(
         w_loc = w_loc[canon] * valid
         if stale_loc is not None:
             stale_loc = stale_loc[canon]
-    if _resolve_impl(impl) == "kernel":
+    if resolve_impl(impl, "agg") == "kernel":
         num = fedavg_agg(
             deltas, w_loc,
             staleness=stale_loc,

@@ -29,6 +29,8 @@ The registry leaves room for krum / trimmed-mean style strategies: add a
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -154,6 +156,14 @@ _STRATEGIES = {
 
 def make_defense(fed: FedConfig, model_dim: int) -> DefenseStrategy:
     """Build the strategy ``FedConfig.resolved_defense`` names."""
+    if fed.defense is None:
+        warnings.warn(
+            "FedConfig.defense is unset; resolving the defense strategy from "
+            "the legacy FedConfig.foolsgold bool is deprecated — set "
+            'defense="none"|"foolsgold"|"foolsgold_sketch" explicitly',
+            DeprecationWarning,
+            stacklevel=2,
+        )
     name = fed.resolved_defense
     try:
         cls = _STRATEGIES[name]

@@ -31,26 +31,23 @@ Exports:
   ``client_spec`` / ``replicated_spec`` -- the ``PartitionSpec`` vocabulary
                        the engine threads through its in/out specs.
 
-The LM-workload cohort step (``build_fedar_train_step`` /
-``build_fedar_local_rounds``) remains below: it drives a *model* training
-mesh where the data axis indexes client cohorts — the engine-scale
-simulation path lives in ``core/engine.py``.
+(The old parallel LM cohort step — ``build_fedar_train_step`` /
+``build_fedar_local_rounds`` — is gone: transformer clients now run through
+``FedAREngine`` behind the ``ClientModel`` protocol, see
+``models/client.py`` and ``examples/federated_lm.py``.  Plain data-parallel
+LM pre-training lives in ``launch/train.py``.)
 """
 from __future__ import annotations
 
 import warnings
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.common.config import FedConfig, TrainConfig
-from repro.core.trust import TrustState, init_trust, update_trust
-from repro.models.model import Model
-from repro.optim.optimizers import apply_updates, make_optimizer
+from repro.common.config import FedConfig
 
 
 # ---------------------------------------------------------------------------
@@ -180,196 +177,3 @@ def packed_specs(fed: FedConfig, packed: dict) -> dict:
         )
     return specs
 
-
-# ---------------------------------------------------------------------------
-# LM-workload cohort step (model-parallel mesh; data axis = client cohorts)
-# ---------------------------------------------------------------------------
-
-class CohortState(NamedTuple):
-    """Server-visible federated state, carried through the jitted step."""
-
-    trust: TrustState
-    compute: jnp.ndarray  # (C,) relative speed in [0.2, 1]
-    bandwidth: jnp.ndarray  # (C,)
-    sizes: jnp.ndarray  # (C,) n_c local dataset sizes (relative)
-
-
-def init_cohorts(num_cohorts: int, fed: FedConfig, *, seed: int = 0) -> CohortState:
-    rng = np.random.default_rng(seed)
-    return CohortState(
-        trust=init_trust(num_cohorts, fed),
-        compute=jnp.asarray(rng.uniform(0.2, 1.0, num_cohorts), jnp.float32),
-        bandwidth=jnp.asarray(rng.uniform(0.2, 1.0, num_cohorts), jnp.float32),
-        sizes=jnp.asarray(rng.uniform(0.5, 1.0, num_cohorts), jnp.float32),
-    )
-
-
-class TrainState(NamedTuple):
-    params: Any
-    opt_state: Any
-    cohorts: CohortState
-    step: jnp.ndarray
-
-
-def cohort_latency(cohorts: CohortState, key, jitter: float = 0.25):
-    """Virtual round latency per cohort, normalized so the median cohort
-    lands well inside the timeout."""
-    base = 0.6 / cohorts.compute + 0.4 / cohorts.bandwidth
-    noise = jnp.exp(jitter * jax.random.normal(key, base.shape))
-    return base * noise
-
-
-def build_fedar_train_step(
-    model: Model,
-    fed: FedConfig,
-    tc: TrainConfig,
-    num_cohorts: int,
-    *,
-    baseline: bool = False,
-):
-    """Returns ``step(state, batch, key) -> (state, metrics)``.
-
-    ``baseline=True`` gives plain synchronous data-parallel training (no
-    trust weighting, no straggler masking) — the paper's FedAvg baseline at
-    mesh scale."""
-    opt = make_optimizer(tc)
-
-    def step(state: TrainState, batch, key):
-        C = num_cohorts
-        co = state.cohorts
-
-        # ------- virtual-time straggler + trust weights (stop-grad consts)
-        k_lat = jax.random.fold_in(key, 1)
-        lat = cohort_latency(co, k_lat)
-        on_time = lat <= fed.timeout
-        trust_pos = jnp.maximum(co.trust.score, 0.0)
-        w = trust_pos * co.sizes
-        if baseline:
-            w = jnp.ones((C,), jnp.float32)
-            on_time = jnp.ones((C,), bool)
-
-        def loss_fn(params):
-            per_row, aux = model.loss_per_example(
-                params, batch, remat=tc.remat, loss_chunk=tc.loss_chunk,
-                unroll=tc.unroll,
-            )
-            B = per_row.shape[0]
-            per_cohort = per_row.reshape(C, B // C).mean(axis=1)  # (C,)
-            # deviation gate (z-score over on-time cohorts)
-            pc = jax.lax.stop_gradient(per_cohort)
-            mu = jnp.sum(pc * on_time) / jnp.maximum(jnp.sum(on_time), 1)
-            sd = jnp.sqrt(
-                jnp.sum(on_time * (pc - mu) ** 2)
-                / jnp.maximum(jnp.sum(on_time), 1)
-                + 1e-12
-            )
-            deviated = on_time & (pc > mu + fed.deviation_gamma * sd)
-            if baseline:
-                deviated = jnp.zeros((C,), bool)
-            mask = on_time & ~deviated
-            ww = jax.lax.stop_gradient(w * mask)
-            wsum = jnp.maximum(jnp.sum(ww), 1e-9)
-            loss = jnp.sum(ww * per_cohort) / wsum + aux
-            return loss, (per_cohort, deviated, aux)
-
-        (loss, (per_cohort, deviated, aux)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True
-        )(state.params)
-
-        updates, opt_state = opt.update(grads, state.opt_state, state.params, state.step)
-        params = apply_updates(state.params, updates)
-
-        trust = update_trust(
-            co.trust,
-            fed,
-            selected=jnp.ones((C,), bool),
-            on_time=on_time,
-            deviated=deviated,
-            interested=jnp.zeros((C,), bool),
-        )
-        new_state = TrainState(
-            params=params,
-            opt_state=opt_state,
-            cohorts=co._replace(trust=trust),
-            step=state.step + 1,
-        )
-        metrics = {
-            "loss": loss,
-            "aux": aux,
-            "stragglers": jnp.sum(~on_time),
-            "banned": jnp.sum(deviated),
-            "mean_trust": jnp.mean(trust.score),
-            "per_cohort_loss": per_cohort,
-        }
-        return new_state, metrics
-
-    return step
-
-
-# ---------------------------------------------------------------------------
-# E > 1 true local epochs via shard_map (data-parallel meshes)
-# ---------------------------------------------------------------------------
-
-def build_fedar_local_rounds(
-    model: Model,
-    fed: FedConfig,
-    tc: TrainConfig,
-    mesh,
-    num_cohorts: int,
-    local_steps: int,
-):
-    """Cohort-stacked local SGD: params carry a leading (C,) axis sharded over
-    the data axis; each cohort runs ``local_steps`` SGD steps on its own
-    replica (true divergence), then the server psums trust-weighted deltas.
-    Data-parallel only (model axes unused) — see DESIGN.md §4."""
-    from jax.experimental.shard_map import shard_map
-
-    axis = "data"
-
-    def round_fn(stacked_params, batch, weights):
-        """stacked_params: (C, ...) pytree; batch tokens (C, B_c, S);
-        weights (C,) trust*mask*size, already stop-grad."""
-
-        def one_cohort(params, tokens, labels):
-            def local_step(p, _):
-                loss, grads = jax.value_and_grad(
-                    lambda pp: model.loss(pp, {"tokens": tokens, "labels": labels},
-                                          remat=tc.remat)[0]
-                )(p)
-                p = jax.tree.map(lambda a, g: a - tc.lr * g, p, grads)
-                return p, loss
-
-            new, losses = jax.lax.scan(local_step, params, None, length=local_steps)
-            return new, losses[-1]
-
-        def shard_fn(sp, tok, lab, wts):
-            new, losses = jax.vmap(one_cohort)(sp, tok, lab)
-            # trust-weighted delta aggregation across every cohort (global)
-            delta = jax.tree.map(lambda n, o: n - o, new, sp)
-            wloc = wts  # (C_local,)
-            num = jax.tree.map(
-                lambda d: jax.lax.psum(
-                    jnp.tensordot(wloc, d, axes=1), axis
-                ),
-                delta,
-            )
-            den = jax.lax.psum(jnp.sum(wloc), axis)
-            agg = jax.tree.map(lambda n: n / jnp.maximum(den, 1e-9), num)
-            # every cohort restarts from (old global + aggregated delta);
-            # cohort replicas within a shard all held the same pre-round
-            # global, so sp[0] is the old global model.
-            glob = jax.tree.map(
-                lambda s, a: jnp.broadcast_to((s[0] + a)[None], s.shape), sp, agg
-            )
-            return glob, jax.lax.pmean(jnp.mean(losses), axis)
-
-        specs_p = jax.tree.map(lambda _: P(axis), stacked_params)
-        return shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(specs_p, P(axis), P(axis), P(axis)),
-            out_specs=(specs_p, P()),
-            check_rep=False,
-        )(stacked_params, batch["tokens"], batch["labels"], weights)
-
-    return round_fn

@@ -66,7 +66,8 @@ masked epochs x batches loop in one ``pallas_call``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -95,29 +96,28 @@ from repro.core.resources import (
 )
 from repro.core.selection import select_clients
 from repro.core.trust import TrustState, init_trust, update_trust
-from repro.kernels.local_sgd import fused_fits_vmem, local_sgd_fused
-from repro.models.mnist import init_mnist, local_sgd, mnist_accuracy, mnist_loss
-
-
-def _resolve_sgd_impl(impl: str) -> str:
-    """auto -> fused Pallas kernel on TPU, XLA vmap elsewhere (mirrors
-    ``agg_impl`` / ``defense_impl`` routing)."""
-    if impl == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "einsum"
-    return impl
+from repro.kernels.ops import resolve_impl
+from repro.models.client import ClientModel
+from repro.models.mnist import MnistClientModel
 
 
 def flatten(params) -> jnp.ndarray:
+    """Param pytree -> flat (D,) aggregation-boundary vector.  Leaves
+    concatenate in ``jax.tree.leaves`` order (dict keys sorted); mixed leaf
+    dtypes promote to the widest float (``unflatten`` casts back)."""
     leaves = jax.tree.leaves(params)
     return jnp.concatenate([leaf.reshape(-1) for leaf in leaves])
 
 
 def unflatten(flat, template):
+    """Flat (D,) vector -> pytree shaped (and dtyped) like ``template``.
+    The per-leaf ``astype`` restores low-precision leaves (bf16 round-trips
+    exactly through the f32 flat view); float32 templates are untouched."""
     leaves, treedef = jax.tree.flatten(template)
     out, off = [], 0
     for leaf in leaves:
         n = int(np.prod(leaf.shape))
-        out.append(flat[off : off + n].reshape(leaf.shape))
+        out.append(flat[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
         off += n
     return jax.tree.unflatten(treedef, out)
 
@@ -164,15 +164,34 @@ class FedAREngine:
 
     def __init__(
         self,
-        cfg: MnistConfig,
+        model: Union[ClientModel, MnistConfig],
         fed: FedConfig,
         req: TaskRequirement,
         *,
         lr: float = 0.1,
     ):
-        self.cfg, self.fed, self.req, self.lr = cfg, fed, req, lr
+        # a bare MnistConfig keeps the paper-exact legacy constructor working
+        if isinstance(model, MnistConfig):
+            model = MnistClientModel(model)
+        self.model = model
+        self.cfg = getattr(model, "cfg", None)
+        self.fed, self.req, self.lr = fed, req, lr
+        # resolve the local-SGD backend once: the fused Pallas kernel only
+        # applies to families that ship one — an explicit ``"kernel"``
+        # request on any other family falls back to the vmapped XLA path
+        self._sgd_kernel = (
+            resolve_impl(fed.sgd_impl, "sgd") == "kernel"
+            and model.supports_fused
+        )
+        if fed.sgd_impl == "kernel" and not model.supports_fused:
+            warnings.warn(
+                f'sgd_impl="kernel" requests the fused Pallas local-SGD '
+                f"kernel, but model family {model.family!r} does not ship "
+                f"one; falling back to the vmapped XLA path",
+                stacklevel=2,
+            )
         key = jax.random.PRNGKey(fed.seed)
-        self.template = init_mnist(key, cfg)
+        self.template = model.init(key)
         self.dim = flatten(self.template).shape[0]
         self.defense = make_defense(fed, self.dim)
         self.resources0, self.poison_mask = make_fleet(
@@ -266,7 +285,8 @@ class FedAREngine:
                 "activations": Pr,
                 "packed": packed_specs(self.fed, data["packed"]),
             }
-        specs = {"x": Pc, "y": Pc, "sizes": Pr, "activations": Pc}
+        specs = {k: Pc for k in self.model.data_keys}
+        specs["sizes"] = Pr
         if data is not None:
             if "mask" in data:
                 specs["mask"] = Pc
@@ -283,60 +303,51 @@ class FedAREngine:
         return (
             self.state_specs(),
             self.data_specs(data),
-            None if eval_set is None else (Pr, Pr),
+            None
+            if eval_set is None
+            else jax.tree.map(lambda _: Pr, eval_set),
             None if force_straggler is None else Pr,
         )
 
     # ---------------------------------------------------- ClientUpdate
-    def _block_sgd(self, g_flat, x, y, act, m):
+    def _block_sgd(self, g_flat, fields, m):
         """Local SGD over one block of clients -> stacked flat local params
-        (rows, D).  Routes ``FedConfig.sgd_impl``: the fused Pallas kernel
-        (``kernels/local_sgd``) runs the whole masked epochs x batches loop
-        per client inside one ``pallas_call``; the XLA path vmaps
-        ``models.mnist.local_sgd`` (the seed-exact reference)."""
-        fed, cfg = self.fed, self.cfg
-        if _resolve_sgd_impl(fed.sgd_impl) == "kernel" and fused_fits_vmem(
-            x.shape[1], cfg.input_dim, cfg.hidden, cfg.num_classes
-        ):
-            p = unflatten(g_flat, self.template)
-            mm = jnp.ones(x.shape[:2], bool) if m is None else m
-            new = local_sgd_fused(
-                p["w1"], p["b1"], p["w2"], p["b2"], x, y, act, mm,
-                lr=self.lr, batch_size=fed.local_batch_size,
-                epochs=fed.local_epochs,
-                interpret=jax.default_backend() != "tpu",
+        (rows, D).  ``fields`` is the dict of stacked per-client sample
+        arrays keyed by ``self.model.data_keys`` (client axis leading).
+        Routes ``FedConfig.sgd_impl``: when resolved to ``"kernel"`` on a
+        family that ships a fused Pallas kernel, the model's
+        ``fused_block_update`` runs the whole masked epochs x batches loop
+        per client inside one ``pallas_call`` (it returns ``None`` when the
+        block does not fit, e.g. VMEM); otherwise the XLA path vmaps the
+        model's ``client_update`` (the seed-exact reference)."""
+        fed = self.fed
+        if self._sgd_kernel:
+            fused = self.model.fused_block_update(
+                g_flat, fields, m, lr=self.lr,
+                batch_size=fed.local_batch_size, epochs=fed.local_epochs,
             )
-            # flatten order must match ``flatten`` (dict leaves sort as
-            # b1, b2, w1, w2)
-            rows = x.shape[0]
-            return jnp.concatenate(
-                [new[k].reshape(rows, -1) for k in ("b1", "b2", "w1", "w2")],
-                axis=1,
-            )
+            if fused is not None:
+                return fused
 
-        def client_update(p_flat, x, y, act, m=None):
+        def client_update(p_flat, f, m=None):
             p = unflatten(p_flat, self.template)
-            new = local_sgd(
+            new = self.model.client_update(
                 p,
-                x,
-                y,
+                f,
                 lr=self.lr,
                 batch_size=fed.local_batch_size,
                 epochs=fed.local_epochs,
-                activation=act,
                 sample_mask=m,
             )
             return flatten(new)
 
         if m is None:
-            return jax.vmap(client_update, in_axes=(None, 0, 0, 0))(
-                g_flat, x, y, act
-            )
-        return jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
-            g_flat, x, y, act, m
+            return jax.vmap(client_update, in_axes=(None, 0))(g_flat, fields)
+        return jax.vmap(client_update, in_axes=(None, 0, 0))(
+            g_flat, fields, m
         )
 
-    def _gated_block_locals(self, g_flat, x, y, act, m, sel_rows):
+    def _gated_block_locals(self, g_flat, fields, m, sel_rows):
         """Selection-gated ClientUpdate over one client block: gather the
         (statically capped) selected rows and run local SGD over that
         cohort only.  Returns ``(idx, locals_c, valid)`` — the block rows
@@ -345,14 +356,15 @@ class FedAREngine:
         back with the untouched global params as the fill row, so selected
         clients' local params (and therefore deltas) are bit-identical to
         the full-block vmap and unselected deltas are exact zeros."""
-        rows = x.shape[0]
+        rows = sel_rows.shape[0]
         cap = min(rows, self.cohort_cap)
         # stable argsort: selected rows first, in canonical order
         order = jnp.argsort(jnp.where(sel_rows, 0, 1))
         idx = order[:cap]
         valid = sel_rows[idx]
         m_c = None if m is None else m[idx]
-        locals_c = self._block_sgd(g_flat, x[idx], y[idx], act[idx], m_c)
+        fields_c = {k: v[idx] for k, v in fields.items()}
+        locals_c = self._block_sgd(g_flat, fields_c, m_c)
         return idx, locals_c, valid
 
     @staticmethod
@@ -400,12 +412,16 @@ class FedAREngine:
                     keepdims=False,
                 )
                 m = m & win
+            # packed buckets carry (x, y, act) tuples; match them to the
+            # model's field names positionally (the packed layout is only
+            # built for ``packed_supported`` families)
+            fields = dict(zip(self.model.data_keys, (x, y, act)))
             if self.cohort_cap is None:
-                parts.append(self._block_sgd(g_flat, x, y, act, m))
+                parts.append(self._block_sgd(g_flat, fields, m))
             else:
                 sel_b = sel_loc[perm] & valid
                 idx, locals_c, vcoh = self._gated_block_locals(
-                    g_flat, x, y, act, m, sel_b
+                    g_flat, fields, m, sel_b
                 )
                 parts.append(locals_c)
                 canon.append(perm[idx])
@@ -423,24 +439,26 @@ class FedAREngine:
     def _round_step(self, state: EngineState, data, eval_set,
                     force_straggler, train_flops):
         """One communication round, fully traceable.  ``data``: dict with
-        stacked per-client arrays x (N, n, 784), y (N, n), sizes (N,),
-        activations (N,) int32 (0=relu, 1=softmax per Table II), plus the
-        optional ragged-shard keys from ``data/datasets``: ``mask`` (N, n)
-        bool marks the real (non-padding) samples, and ``round_mask``
-        (W, N, n) bool is a drift schedule — round t trains on window
-        ``t mod W`` (``sizes`` stays the static n_u aggregation weight).
-        Alternatively ``data["packed"]`` holds the bucketed packed layout
-        (see ``_packed_locals``).  ``train_flops`` is the static per-client
-        FLOP count of the virtual-latency model — computed host-side from
-        the *dense* sample width so the physical layout (packed or padded)
+        the model family's stacked per-client sample arrays (keys =
+        ``self.model.data_keys``, client axis leading — e.g. x (N, n, 784) /
+        y (N, n) / activations (N,) for the MNIST MLP, tokens (N, n, S) /
+        labels (N, n, S) for LM clients), ``sizes`` (N,), plus the optional
+        ragged-shard keys from ``data/datasets``: ``mask`` (N, n) bool marks
+        the real (non-padding) samples, and ``round_mask`` (W, N, n) bool is
+        a drift schedule — round t trains on window ``t mod W`` (``sizes``
+        stays the static n_u aggregation weight).  Alternatively
+        ``data["packed"]`` holds the bucketed packed layout (see
+        ``_packed_locals``).  ``train_flops`` is the static per-client FLOP
+        count of the virtual-latency model — computed host-side from the
+        *dense* sample width so the physical layout (packed or padded)
         cannot shift straggler numerics.
 
-        Under mesh comms this body executes per-shard: ``data["x"/"y"/
-        "activations"]`` (or the packed buckets), ``state.fg_history`` and
+        Under mesh comms this body executes per-shard: the sample arrays
+        (or the packed buckets), ``state.fg_history`` and
         ``state.pending_delta`` hold this shard's client block; everything
         (N,)-shaped is replicated, and cross-shard reductions go through
         ``self.comms``."""
-        fed, cfg, comms = self.fed, self.cfg, self.comms
+        fed, comms = self.fed, self.comms
         key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), state.round_idx)
         k_sel, k_lat, _k_poi = jax.random.split(key, 3)
 
@@ -474,16 +492,17 @@ class FedAREngine:
             # --- lines 16-21 (ClientUpdate): local SGD vmapped over this
             # shard's client block (or its gated cohort); non-participants
             # are masked out of the aggregate
-            x, y, act = data["x"], data["y"], data["activations"]
+            fields = {k: data[k] for k in self.model.data_keys}
             if self.cohort_cap is None:
-                locals_flat = self._block_sgd(g_flat, x, y, act, sample_mask)
+                locals_flat = self._block_sgd(g_flat, fields, sample_mask)
             else:
+                sel_loc = comms.local(selected)
                 idx, locals_c, valid = self._gated_block_locals(
-                    g_flat, x, y, act, sample_mask, comms.local(selected)
+                    g_flat, fields, sample_mask, sel_loc
                 )
                 cohort = (idx, valid)
                 locals_flat = self._expand_cohort(
-                    locals_c, idx, valid, x.shape[0], g_flat
+                    locals_c, idx, valid, sel_loc.shape[0], g_flat
                 )
         deltas = locals_flat - g_flat[None, :]  # (N_loc, D)
         # compact deltas: deviation + the fedar/fedavg reduction only touch
@@ -580,8 +599,7 @@ class FedAREngine:
 
         if eval_set is not None:
             params_tree = unflatten(g_new, self.template)
-            loss = mnist_loss(params_tree, eval_set[0], eval_set[1])
-            acc = mnist_accuracy(params_tree, eval_set[0], eval_set[1])
+            loss, acc = self.model.metrics(params_tree, eval_set)
         else:
             loss = acc = jnp.full((), jnp.nan)
 
@@ -699,22 +717,30 @@ class FedAREngine:
     # ------------------------------------------------------------------
     def _train_flops(self, data) -> float:
         """Static per-client FLOP count for the virtual-latency model,
-        from the DENSE sample width (``n_max`` for packed layouts) — the
-        physical layout must not move straggler numerics."""
+        delegated to the model family; the sample-block shape comes from
+        the DENSE width (``n_max`` for packed layouts) — the physical
+        layout must not move straggler numerics."""
         if "packed" in data:
-            n = float(np.asarray(data["packed"]["n_max"]))
+            n = int(np.asarray(data["packed"]["n_max"]))
+            shape = (n,) + tuple(data["packed"]["x"][0].shape[2:])
         else:
-            n = data["x"].shape[1]
+            shape = tuple(data[self.model.data_keys[0]].shape[1:])
         return float(
-            2 * self.fed.local_epochs * n * self.cfg.input_dim
-            * self.cfg.hidden
+            self.model.train_flops(shape, epochs=self.fed.local_epochs)
         )
 
     def _check_packed(self, data) -> None:
         """Host-side layout check: a packed dict built for k shards only
-        scatters correctly on a k-shard mesh (its ``perm`` is shard-local)."""
+        scatters correctly on a k-shard mesh (its ``perm`` is shard-local),
+        and only ``packed_supported`` model families understand it."""
         if "packed" not in data:
             return
+        if not self.model.packed_supported:
+            raise ValueError(
+                f"model family {self.model.family!r} does not support the "
+                f"bucketed packed layout; pass the dense per-client arrays "
+                f"(FederatedDataset.arrays()) instead"
+            )
         built = int(np.asarray(data["packed"]["shards"]))
         if built != self.comms.shards:
             raise ValueError(

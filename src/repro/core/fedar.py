@@ -24,7 +24,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FedConfig
-from repro.configs.fedar_mnist import MnistConfig
 from repro.core.engine import FedAREngine, RoundOutputs, flatten, unflatten
 from repro.core.resources import TaskRequirement
 
@@ -33,9 +32,13 @@ __all__ = ["FedARServer", "flatten", "unflatten"]
 
 @dataclass
 class FedARServer:
-    """Holds server-side state and runs communication rounds."""
+    """Holds server-side state and runs communication rounds.
 
-    cfg: MnistConfig
+    ``cfg`` is either an ``MnistConfig`` (coerced to the paper's MLP client
+    by the engine, the seed API) or any :class:`repro.models.client
+    .ClientModel` — e.g. ``LMClientModel`` for transformer fleets."""
+
+    cfg: Any
     fed: FedConfig
     req: TaskRequirement
     lr: float = 0.1

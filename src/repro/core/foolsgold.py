@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core.distributed import ClientComms
 from repro.kernels.defense_sim import sketch_similarity
+from repro.kernels.ops import resolve_impl
 
 _IDENTITY = ClientComms()
 
@@ -51,12 +52,6 @@ def _row_offset(comms: ClientComms, n_loc: int):
     return jax.lax.axis_index(comms.axis) * n_loc
 
 
-def _resolve_impl(impl: str) -> str:
-    if impl == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "einsum"
-    return impl
-
-
 def _similarity_block(history, active, *, comms: ClientComms, impl: str):
     """Row-normalize the shard-local history block, gather the unit rows,
     and return the masked (N_loc, N) cosine block (self-similarity zeroed,
@@ -66,7 +61,7 @@ def _similarity_block(history, active, *, comms: ClientComms, impl: str):
     norm = jnp.linalg.norm(history, axis=1, keepdims=True)
     unit = history / jnp.maximum(norm, 1e-9)
     unit_full = comms.gather_defense(unit)  # (N, d) — the one all-to-all
-    if _resolve_impl(impl) == "kernel":
+    if resolve_impl(impl, "defense") == "kernel":
         cs = sketch_similarity(
             unit, unit_full, interpret=jax.default_backend() != "tpu"
         )

@@ -1,12 +1,18 @@
-"""Batching pipeline: host-side iterator producing device-ready batches with
-optional cohort layout (leading dim grouped by cohort for the FedAR step)."""
+"""Batching pipeline: host-side iterators and the federated LM corpus.
+
+``lm_batches`` feeds the plain data-parallel trainer (``launch/train.py``);
+``federated_lm_corpus`` builds the engine-ready per-client sequence shards
+that give transformer clients real non-IID heterogeneity (the
+``corpus_skew`` scenario, text analogue of ``label_skew``).
+"""
 from __future__ import annotations
 
-from typing import Iterator
+from typing import Iterator, Tuple
 
 import numpy as np
 
 from repro.common.config import ModelConfig
+from repro.data.scenarios import make_scenario, plan_sizes
 from repro.data.synthetic import token_stream
 
 
@@ -29,11 +35,128 @@ def lm_batches(
         yield b
 
 
-def cohort_batches(base: Iterator[dict], num_cohorts: int) -> Iterator[dict]:
-    """Reshape (B, ...) batches to cohort-major (C, B/C, ...) stacking."""
-    for b in base:
-        out = {}
-        for k, v in b.items():
-            B = v.shape[0]
-            out[k] = v.reshape(num_cohorts, B // num_cohorts, *v.shape[1:])
-        yield out
+def _topic_sequences(rng, n: int, seq: int, vocab: int, probs, succ
+                     ) -> np.ndarray:
+    """n sequences of length seq+1 from one topic's bigram-ish process:
+    each step follows the topic's favored-successor table with prob 1/2,
+    else redraws from the topic's unigram distribution (the ``token_stream``
+    process, conditioned on a topic)."""
+    t = np.empty((n, seq + 1), np.int64)
+    t[:, 0] = rng.choice(vocab, size=n, p=probs)
+    for s in range(seq):
+        fresh = rng.choice(vocab, size=n, p=probs)
+        follow = rng.random(n) < 0.5
+        t[:, s + 1] = np.where(follow, succ[t[:, s]], fresh)
+    return t
+
+
+def federated_lm_corpus(
+    num_clients: int,
+    *,
+    vocab: int,
+    seq: int,
+    samples_per_client: int,
+    topics: int = 8,
+    scenario: str = "corpus_skew",
+    alpha: float = 0.3,
+    eval_sequences: int = 64,
+    poisoners: Tuple[int, ...] = (),
+    seed: int = 0,
+) -> Tuple[dict, dict]:
+    """Topic-conditioned synthetic corpus, partitioned non-IID over clients.
+
+    Each of ``topics`` topics gets its own Zipf unigram distribution (over a
+    topic-permuted vocab) and its own favored-successor table, so sequences
+    from different topics have genuinely different token statistics — a
+    model that only ever sees one client's topics overfits its slice, which
+    is exactly the heterogeneity the FedAR aggregation has to survive.  The
+    pool's per-sequence topic ids feed ``make_scenario(scenario, ...)``
+    (default ``corpus_skew``: Dirichlet(alpha) topic skew), producing ragged
+    per-client shards padded to ``(N, n_max, S)`` with a bool sample mask.
+
+    Clients listed in ``poisoners`` get their labels scrambled to uniform
+    random tokens — a label-flip attack in LM form, for exercising the
+    defense / trust path end to end.
+
+    Returns ``(data, meta)``: ``data`` is the engine-ready dict
+    (``tokens``, ``labels`` int32 (N, n_max, S); ``sizes`` float32 (N,);
+    ``mask`` bool (N, n_max), omitted when the shards come out rectangular)
+    and ``meta`` carries ``{"topic_of": pool topic ids, "plan": the
+    ScenarioPlan, "eval": held-out {"tokens", "labels"} drawn from the
+    uniform topic mixture}``.
+    """
+    if not 1 <= topics <= vocab:
+        raise ValueError(f"need 1 <= topics <= vocab, got topics={topics} "
+                         f"vocab={vocab}")
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    base = (1.0 / ranks) / np.sum(1.0 / ranks)
+
+    # per-topic statistics: Zipf mass over a topic-private vocab ordering,
+    # plus a topic-private successor table
+    topic_probs = np.empty((topics, vocab))
+    topic_succ = np.empty((topics, vocab), np.int64)
+    for k in range(topics):
+        perm = rng.permutation(vocab)
+        topic_probs[k, perm] = base
+        topic_succ[k] = rng.integers(0, vocab, vocab)
+
+    pool = num_clients * samples_per_client
+    topic_of = rng.integers(0, topics, pool)
+    tokens_pool = np.empty((pool, seq), np.int64)
+    labels_pool = np.empty((pool, seq), np.int64)
+    for k in range(topics):
+        rows = np.where(topic_of == k)[0]
+        if rows.size == 0:
+            continue
+        t = _topic_sequences(rng, rows.size, seq, vocab,
+                             topic_probs[k], topic_succ[k])
+        tokens_pool[rows] = t[:, :-1]
+        labels_pool[rows] = t[:, 1:]
+
+    plan = make_scenario(scenario, topic_of, num_clients, samples_per_client,
+                         seed=seed, alpha=alpha)
+    sizes = plan_sizes(plan)
+    n_max = max(int(sizes.max()), 1)
+    tokens = np.zeros((num_clients, n_max, seq), np.int32)
+    labels = np.zeros((num_clients, n_max, seq), np.int32)
+    mask = np.zeros((num_clients, n_max), bool)
+    for i, idx in enumerate(plan.client_indices):
+        n = len(idx)
+        tokens[i, :n] = tokens_pool[idx]
+        labels[i, :n] = labels_pool[idx]
+        mask[i, :n] = True
+
+    for i in poisoners:
+        labels[i] = rng.integers(0, vocab, labels[i].shape)
+
+    data = {
+        "tokens": tokens,
+        "labels": labels,
+        "sizes": sizes.astype(np.float32),
+    }
+    if not mask.all():
+        data["mask"] = mask
+
+    # held-out eval batch from the UNIFORM topic mixture — global model
+    # quality over all domains, the quantity federated averaging protects
+    ev_topics = rng.integers(0, topics, eval_sequences)
+    ev_tokens = np.empty((eval_sequences, seq), np.int64)
+    ev_labels = np.empty((eval_sequences, seq), np.int64)
+    for k in range(topics):
+        rows = np.where(ev_topics == k)[0]
+        if rows.size == 0:
+            continue
+        t = _topic_sequences(rng, rows.size, seq, vocab,
+                             topic_probs[k], topic_succ[k])
+        ev_tokens[rows] = t[:, :-1]
+        ev_labels[rows] = t[:, 1:]
+    meta = {
+        "topic_of": topic_of,
+        "plan": plan,
+        "eval": {
+            "tokens": ev_tokens.astype(np.int32),
+            "labels": ev_labels.astype(np.int32),
+        },
+    }
+    return data, meta

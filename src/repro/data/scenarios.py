@@ -15,6 +15,12 @@ Registered scenarios:
   ``quantity_skew``  -- Dirichlet(alpha) *sizes*: clients draw IID labels but
                         wildly different sample counts; totals are conserved
                         exactly (largest-remainder rounding).
+  ``corpus_skew``    -- the text analogue of ``label_skew``: ``y`` holds
+                        per-sequence TOPIC ids (see
+                        ``data/pipeline.federated_lm_corpus``) and the same
+                        Dirichlet(alpha) partition concentrates topics onto
+                        few clients — each robot's captured text comes from
+                        its own domain mix.
   ``robot_drift``    -- per-client class mixtures that rotate across
                         ``windows`` activity windows, modeling the paper's
                         mobile robots whose captured data drifts as they
@@ -131,6 +137,19 @@ def label_skew_scenario(y, num_clients, samples_per_client, *, seed=0,
             p = np.sort(rng.choice(p, samples_per_client, replace=False))
         capped.append(p)
     return ScenarioPlan(capped)
+
+
+@register_scenario("corpus_skew")
+def corpus_skew_scenario(y, num_clients, samples_per_client, *, seed=0,
+                         alpha=0.3):
+    """Dirichlet(alpha) skew over per-sequence topic ids — identical index
+    math to ``label_skew`` (a topic IS a label over sequences), registered
+    separately so LM data builders name the text scenario explicitly and
+    can default to a harsher alpha (topic mixes in the wild are peakier
+    than class mixes)."""
+    return label_skew_scenario(
+        y, num_clients, samples_per_client, seed=seed, alpha=alpha
+    )
 
 
 def quantity_sizes(total: int, num_clients: int, alpha: float, rng

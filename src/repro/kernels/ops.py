@@ -19,6 +19,32 @@ from repro.kernels.ssm_scan import ssm_scan as _ssm_kernel
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
+_IMPL_KINDS = ("sgd", "agg", "defense")
+_IMPL_VALUES = ("auto", "kernel", "einsum")
+
+
+def resolve_impl(name: str, kind: str) -> str:
+    """Resolve one of the engine's kernel-routing knobs (``FedConfig.sgd_impl``
+    / ``agg_impl`` / ``defense_impl``) to a concrete backend.
+
+    All three knobs share the same vocabulary: ``"auto"`` picks the Pallas
+    kernel on a TPU backend and the XLA einsum path elsewhere; ``"kernel"`` /
+    ``"einsum"`` force the choice (off-TPU the kernel runs under
+    ``interpret=True``).  ``kind`` only scopes the error message so a typo in
+    any of the three knobs reports uniformly.
+    """
+    if kind not in _IMPL_KINDS:
+        raise ValueError(
+            f"unknown impl kind {kind!r} (known: {list(_IMPL_KINDS)})"
+        )
+    if name == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "einsum"
+    if name not in _IMPL_VALUES:
+        raise ValueError(
+            f"unknown {kind}_impl {name!r} (expected one of {list(_IMPL_VALUES)})"
+        )
+    return name
+
 
 def fedavg_agg(deltas, weights, *, use_pallas: bool = True, interpret: bool | None = None):
     if not use_pallas:

@@ -26,16 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import INPUT_SHAPES, FedConfig, TrainConfig
+from repro.common.config import INPUT_SHAPES, TrainConfig
 from repro.configs import ARCH_IDS, cfg_for_shape, get_config
-from repro.core.distributed import (
-    TrainState,
-    build_fedar_train_step,
-    init_cohorts,
-)
 from repro.launch import sharding
 from repro.launch.input_specs import abstract_params, input_specs
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.train import TrainState, build_train_step
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
 
@@ -88,22 +84,15 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
-def build_abstract_state(model: Model, tc: TrainConfig, fed: FedConfig, C: int):
+def build_abstract_state(model: Model, tc: TrainConfig):
     params = abstract_params(model.cfg)
     opt = make_optimizer(tc)
     opt_state = jax.eval_shape(opt.init, params)
-    cohorts = jax.eval_shape(lambda: init_cohorts(C, fed))
     step = jax.ShapeDtypeStruct((), jnp.int32)
-    return TrainState(params, opt_state, cohorts, step)
+    return TrainState(params, opt_state, step)
 
 
-def replicate_like(tree, mesh):
-    from jax.sharding import PartitionSpec as P
-
-    return jax.tree.map(lambda l: P(*([None] * len(l.shape))), tree)
-
-
-def lower_one(arch, shape_name, *, multi_pod=False, tc=None, fed=None,
+def lower_one(arch, shape_name, *, multi_pod=False, tc=None,
               extra_tags=None):
     """Lower + compile one (arch, shape, mesh) and return the record."""
     from jax.sharding import PartitionSpec as P
@@ -114,18 +103,12 @@ def lower_one(arch, shape_name, *, multi_pod=False, tc=None, fed=None,
     mesh = make_production_mesh(multi_pod=multi_pod)
     tc = tc or TrainConfig(optimizer="sgd", lr=1e-2, remat=True,
                            loss_chunk=512 if cfg.vocab_size > 100_000 else 0)
-    fed = fed or FedConfig()
-    dp = sharding.dp_axes(mesh)
-    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    C = 1
-    for a in dp:
-        C *= axes[a]
 
     t0 = time.time()
     with mesh:
         if shape.kind == "train":
-            step_fn = build_fedar_train_step(model, fed, tc, C)
-            state = build_abstract_state(model, tc, fed, C)
+            step_fn = build_train_step(model, tc)
+            state = build_abstract_state(model, tc)
             batch = input_specs(cfg, shape)
             pspecs = sharding.param_specs(state.params, mesh)
             state_specs = TrainState(
@@ -133,17 +116,13 @@ def lower_one(arch, shape_name, *, multi_pod=False, tc=None, fed=None,
                 opt_state=sharding.param_specs(state.opt_state, mesh)
                 if jax.tree.leaves(state.opt_state)
                 else state.opt_state,
-                cohorts=replicate_like(state.cohorts, mesh),
                 step=P(),
             )
             bspecs = sharding.batch_specs(batch, mesh)
-            key = jax.ShapeDtypeStruct((2,), jnp.uint32)
             lowered = jax.jit(
                 step_fn,
-                in_shardings=sharding.named(
-                    mesh, (state_specs, bspecs, P())
-                ),
-            ).lower(state, batch, key)
+                in_shardings=sharding.named(mesh, (state_specs, bspecs)),
+            ).lower(state, batch)
         elif shape.kind == "prefill":
             batch = input_specs(cfg, shape)
             params = abstract_params(cfg)
@@ -177,6 +156,8 @@ def lower_one(arch, shape_name, *, multi_pod=False, tc=None, fed=None,
         t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_rec = {
@@ -295,31 +276,23 @@ def _lower_cfg(cfg, arch, shape_name, *, multi_pod, tc, policy="fsdp_tp"):
     shape = INPUT_SHAPES[shape_name]
     model = Model(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    fed = FedConfig()
-    dp = sharding.dp_axes(mesh)
-    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    C = 1
-    for a in dp:
-        C *= axes[a]
 
     t0 = time.time()
     if shape.kind == "train":
-        step_fn = build_fedar_train_step(model, fed, tc, C)
-        state = build_abstract_state(model, tc, fed, C)
+        step_fn = build_train_step(model, tc)
+        state = build_abstract_state(model, tc)
         batch = input_specs(cfg, shape)
         state_specs = TrainState(
             params=sharding.param_specs(state.params, mesh, policy=policy),
             opt_state=sharding.param_specs(state.opt_state, mesh)
             if jax.tree.leaves(state.opt_state) else state.opt_state,
-            cohorts=replicate_like(state.cohorts, mesh),
             step=P(),
         )
         bspecs = sharding.batch_specs(batch, mesh)
-        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
         lowered = jax.jit(
             step_fn,
-            in_shardings=sharding.named(mesh, (state_specs, bspecs, P())),
-        ).lower(state, batch, key)
+            in_shardings=sharding.named(mesh, (state_specs, bspecs)),
+        ).lower(state, batch)
     elif shape.kind == "prefill":
         batch = input_specs(cfg, shape)
         params = abstract_params(cfg)
@@ -345,6 +318,8 @@ def _lower_cfg(cfg, arch, shape_name, *, multi_pod, tc, policy="fsdp_tp"):
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "arch": arch,

@@ -1,25 +1,60 @@
-"""Training driver: FedAR cohort training for any --arch on the host mesh.
+"""Training driver: plain data-parallel LM pre-training for any --arch.
 
 Runs REAL steps (reduced or full config) on the available devices; the
-production-mesh path is exercised by dryrun.py.  Example:
+production-mesh path is exercised by dryrun.py.  Federated behaviour —
+trust scoring, straggler masking, buffered async aggregation, defenses —
+lives in ``core.engine.FedAREngine`` (see ``examples/federated_lm.py`` for
+the LM workload through the engine).  Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
-      --reduced --steps 50 --batch 8 --seq 128 --cohorts 4 --ckpt out.msgpack
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt out.msgpack
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import FedConfig, TrainConfig
+from repro.common.config import TrainConfig
 from repro.configs import ARCH_IDS, get_config
-from repro.core.distributed import TrainState, build_fedar_train_step, init_cohorts
 from repro.data.pipeline import lm_batches
 from repro.models.model import Model, param_count
-from repro.optim.optimizers import make_optimizer
+from repro.optim.optimizers import apply_updates, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def build_train_step(model: Model, tc: TrainConfig):
+    """Returns ``step(state, batch) -> (state, metrics)``: one synchronous
+    data-parallel optimizer step on the causal-LM loss."""
+    opt = make_optimizer(tc)
+
+    def step(state: TrainState, batch):
+        def loss_fn(params):
+            loss, parts = model.loss(
+                params, batch, remat=tc.remat, loss_chunk=tc.loss_chunk,
+                unroll=tc.unroll,
+            )
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params
+        )
+        updates, opt_state = opt.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params, opt_state, state.step + 1)
+        return new_state, {"loss": loss, **parts}
+
+    return step
 
 
 def main(argv=None):
@@ -30,12 +65,8 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--cohorts", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="adamw")
-    ap.add_argument("--baseline", action="store_true",
-                    help="plain FedAvg/sync baseline (no trust, no masking)")
-    ap.add_argument("--timeout", type=float, default=3.0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -44,7 +75,6 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = Model(cfg)
-    fed = FedConfig(timeout=args.timeout)
     tc = TrainConfig(optimizer=args.optimizer, lr=args.lr, remat=True)
 
     params = model.init_params(jax.random.PRNGKey(args.seed))
@@ -52,27 +82,22 @@ def main(argv=None):
     state = TrainState(
         params=params,
         opt_state=opt.init(params),
-        cohorts=init_cohorts(args.cohorts, fed, seed=args.seed),
         step=jnp.int32(0),
     )
-    print(f"arch={cfg.name} params={param_count(params):,} "
-          f"cohorts={args.cohorts} baseline={args.baseline}")
+    print(f"arch={cfg.name} params={param_count(params):,}")
 
-    step_fn = jax.jit(
-        build_fedar_train_step(model, fed, tc, args.cohorts, baseline=args.baseline)
-    )
+    step_fn = jax.jit(build_train_step(model, tc))
 
     batches = lm_batches(cfg, batch=args.batch, seq=args.seq,
                          steps=args.steps, seed=args.seed)
     t0 = time.time()
     for i, batch in enumerate(batches):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, m = step_fn(state, batch, jax.random.PRNGKey(1000 + i))
+        state, m = step_fn(state, batch)
         if i % 10 == 0 or i == args.steps - 1:
             print(
                 f"step {i:4d} loss {float(m['loss']):.4f} "
-                f"stragglers {int(m['stragglers'])} banned {int(m['banned'])} "
-                f"mean_trust {float(m['mean_trust']):.1f} "
+                f"nll {float(m['nll']):.4f} "
                 f"({time.time() - t0:.1f}s)"
             )
     if args.ckpt:

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.fedar_mnist import MnistConfig
+from repro.kernels.local_sgd import fused_fits_vmem, local_sgd_fused
+from repro.models.client import ClientModel
 
 
 def init_mnist(key, cfg: MnistConfig):
@@ -97,3 +99,99 @@ def local_sgd(params, x, y, *, lr: float, batch_size: int, epochs: int,
 
     params, _ = jax.lax.scan(epoch, params, None, length=epochs)
     return params
+
+
+class MnistClientModel(ClientModel):
+    """The paper's Table-II MLP behind the engine's ``ClientModel`` surface.
+
+    Data fields: ``x`` (n, 784) flattened images, ``y`` (n,) labels,
+    ``activations`` () per-robot hidden activation id (0=ReLU, 1=Softmax).
+    This family ships the fused Pallas ``local_sgd`` kernel and understands
+    the size-bucketed packed layout.
+    """
+
+    family = "mnist_mlp"
+    data_keys = ("x", "y", "activations")
+    supports_fused = True
+    packed_supported = True
+
+    def __init__(self, cfg: MnistConfig | None = None):
+        self.cfg = cfg if cfg is not None else MnistConfig()
+
+    def init(self, key):
+        return init_mnist(key, self.cfg)
+
+    def loss(self, params, fields, sample_mask=None):
+        return mnist_loss(
+            params, fields["x"], fields["y"], fields["activations"],
+            sample_mask,
+        )
+
+    def client_update(self, params, fields, *, lr, batch_size, epochs,
+                      sample_mask=None):
+        return local_sgd(
+            params, fields["x"], fields["y"], lr=lr, batch_size=batch_size,
+            epochs=epochs, activation=fields["activations"],
+            sample_mask=sample_mask,
+        )
+
+    def metrics(self, params, eval_set):
+        x, y = eval_set
+        return mnist_loss(params, x, y), mnist_accuracy(params, x, y)
+
+    def train_flops(self, sample_shape, *, epochs) -> float:
+        # 2 * E * n * forward matmul flops — the paper's latency model
+        return float(
+            2 * epochs * sample_shape[0] * self.cfg.input_dim
+            * self.cfg.hidden
+        )
+
+    # ------------------------------------------------- fused hot path
+    def _split_flat(self, g_flat):
+        """Slice the flat global vector back into the MLP's leaves, in the
+        same sorted-key order ``core.engine.flatten`` concatenates them
+        (b1, b2, w1, w2)."""
+        cfg = self.cfg
+        sizes = {
+            "b1": (cfg.hidden,),
+            "b2": (cfg.num_classes,),
+            "w1": (cfg.input_dim, cfg.hidden),
+            "w2": (cfg.hidden, cfg.num_classes),
+        }
+        out, off = {}, 0
+        for k in ("b1", "b2", "w1", "w2"):
+            n = 1
+            for s in sizes[k]:
+                n *= s
+            out[k] = g_flat[off : off + n].reshape(sizes[k])
+            off += n
+        return out
+
+    def fused_block_update(self, global_flat, fields, sample_mask, *,
+                           lr, batch_size, epochs):
+        """One ``pallas_call`` runs every client's whole masked
+        epochs x batches loop; returns ``None`` when the block does not fit
+        the kernel's VMEM budget (engine falls back to the vmapped path)."""
+        x, y, act = fields["x"], fields["y"], fields["activations"]
+        cfg = self.cfg
+        if not fused_fits_vmem(
+            x.shape[1], cfg.input_dim, cfg.hidden, cfg.num_classes
+        ):
+            return None
+        p = self._split_flat(global_flat)
+        mm = (
+            jnp.ones(x.shape[:2], bool) if sample_mask is None
+            else sample_mask
+        )
+        new = local_sgd_fused(
+            p["w1"], p["b1"], p["w2"], p["b2"], x, y, act, mm,
+            lr=lr, batch_size=batch_size, epochs=epochs,
+            interpret=jax.default_backend() != "tpu",
+        )
+        # flatten order must match ``flatten`` (dict leaves sort as
+        # b1, b2, w1, w2)
+        rows = x.shape[0]
+        return jnp.concatenate(
+            [new[k].reshape(rows, -1) for k in ("b1", "b2", "w1", "w2")],
+            axis=1,
+        )

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.models import blocks
+from repro.models.client import ClientModel
 from repro.models.layers import dense_init, embed_init, rms_norm
 
 VISION_STUB_DIM = 1024  # InternViT output dim fed by the stubbed frontend
@@ -406,3 +407,110 @@ class Model:
 
 def param_count(params) -> int:
     return sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(params))
+
+
+class LMClientModel(ClientModel):
+    """Transformer LM client behind the engine's ``ClientModel`` surface.
+
+    Wraps ``Model`` (any of the assigned architectures, usually a
+    ``.reduced()`` config) so ``FedAREngine`` can run trust scoring,
+    straggler masking, buffered async aggregation and the sketched defense
+    over transformer clients.  The nested param pytree crosses the
+    aggregation boundary through ``core.engine.flatten`` / ``unflatten``
+    (per-leaf dtypes survive the float32 flat view).
+
+    Data fields: ``tokens`` (n, S) int sequences and ``labels`` (n, S)
+    shifted targets — one client holds n sequences.  ClientUpdate mirrors
+    the MNIST ``local_sgd`` batching exactly: the dense path floors the
+    batch count, the masked (ragged-shard) path ceils and pads with
+    mask-False rows so trailing sequences still train.
+
+    No fused Pallas local-SGD kernel exists for this family
+    (``supports_fused=False``): ``sgd_impl="kernel"`` falls back to the
+    vmapped XLA path with a warning, and the packed bucketed layout is
+    unsupported.
+    """
+
+    family = "lm"
+    data_keys = ("tokens", "labels")
+    supports_fused = False
+    packed_supported = False
+
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.remat = remat
+        self._dim = None  # filled by init(); feeds train_flops
+
+    def init(self, key):
+        params = self.model.init_params(key)
+        self._dim = param_count(params)
+        return params
+
+    def loss(self, params, fields, sample_mask=None):
+        batch = {"tokens": fields["tokens"], "labels": fields["labels"]}
+        per_row, aux = self.model.loss_per_example(
+            params, batch, remat=self.remat
+        )
+        if sample_mask is None:
+            return jnp.mean(per_row) + aux
+        m = sample_mask.astype(per_row.dtype)
+        return jnp.sum(per_row * m) / jnp.maximum(jnp.sum(m), 1.0) + aux
+
+    def client_update(self, params, fields, *, lr, batch_size, epochs,
+                      sample_mask=None):
+        tokens, labels = fields["tokens"], fields["labels"]
+        n = tokens.shape[0]
+        grad_fn = jax.grad(self.loss)
+        if sample_mask is None:
+            nb = n // batch_size
+            tb = tokens[: nb * batch_size].reshape(nb, batch_size, -1)
+            lb = labels[: nb * batch_size].reshape(nb, batch_size, -1)
+            batches = (tb, lb)
+        else:
+            nb = -(-n // batch_size)  # ceil: never drop real sequences
+            pad = nb * batch_size - n
+            tb = jnp.pad(tokens, ((0, pad), (0, 0))).reshape(
+                nb, batch_size, -1
+            )
+            lb = jnp.pad(labels, ((0, pad), (0, 0))).reshape(
+                nb, batch_size, -1
+            )
+            mb = jnp.pad(
+                sample_mask.astype(bool), ((0, pad),)
+            ).reshape(nb, batch_size)
+            batches = (tb, lb, mb)
+
+        def epoch(params, _):
+            def step(params, b):
+                fields_b = {"tokens": b[0], "labels": b[1]}
+                if sample_mask is not None:
+                    g = grad_fn(params, fields_b, b[2])
+                else:
+                    g = grad_fn(params, fields_b)
+                return (
+                    jax.tree.map(lambda p, gg: p - lr * gg, params, g),
+                    None,
+                )
+
+            params, _ = jax.lax.scan(step, params, batches)
+            return params, None
+
+        params, _ = jax.lax.scan(epoch, params, None, length=epochs)
+        return params
+
+    def metrics(self, params, eval_set):
+        batch = {"tokens": eval_set["tokens"], "labels": eval_set["labels"]}
+        total, _parts = self.model.loss(params, batch, remat=self.remat)
+        logits, _ = self.model.forward(params, batch, remat=self.remat)
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32)
+        )
+        return total, acc
+
+    def train_flops(self, sample_shape, *, epochs) -> float:
+        # 6ND per token (fwd + bwd) x n sequences of length S x E epochs
+        if self._dim is None:
+            raise RuntimeError("call init() before train_flops()")
+        n, seq = sample_shape[0], sample_shape[1]
+        return float(6.0 * epochs * n * seq * self._dim)

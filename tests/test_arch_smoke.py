@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.common.config import FedConfig, TrainConfig
+from repro.common.config import TrainConfig
 from repro.configs import ARCH_IDS, get_config
-from repro.core.distributed import TrainState, build_fedar_train_step, init_cohorts
+from repro.launch.train import TrainState, build_train_step
 from repro.models.model import Model, param_count
 from repro.optim.optimizers import make_optimizer
 
@@ -40,13 +40,12 @@ def test_reduced_forward_and_train_step(arch):
     assert logits.shape == (B, total, cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
 
-    # one FedAR train step
-    fed = FedConfig(timeout=1e9)  # no stragglers in the smoke test
+    # one data-parallel train step
     tc = TrainConfig(optimizer="sgd", lr=1e-2)
-    step = build_fedar_train_step(model, fed, tc, num_cohorts=2)
+    step = build_train_step(model, tc)
     opt = make_optimizer(tc)
-    state = TrainState(params, opt.init(params), init_cohorts(2, fed), jnp.int32(0))
-    state2, metrics = jax.jit(step)(state, batch, jax.random.PRNGKey(2))
+    state = TrainState(params, opt.init(params), jnp.int32(0))
+    state2, metrics = jax.jit(step)(state, batch)
     assert bool(jnp.isfinite(metrics["loss"]))
     assert int(state2.step) == 1
     # params actually moved

@@ -1,22 +1,38 @@
-"""End-to-end behaviour tests: train driver, cohort-scale FedAR vs baseline,
-shard_map local-SGD rounds, checkpoint round-trip of a live training state."""
+"""End-to-end behaviour tests: train driver, federated LM through the one
+FedAR engine (ClientModel protocol), corpus-skew data law, checkpoint
+round-trip, straggler-poison invariance."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import FedConfig, TrainConfig
+from repro import FedAREngine, LMClientModel, TaskRequirement
 from repro.configs import get_config
-from repro.core.distributed import (
-    TrainState,
-    build_fedar_local_rounds,
-    build_fedar_train_step,
-    init_cohorts,
-)
-from repro.data.pipeline import cohort_batches, lm_batches
-from repro.models.model import Model
-from repro.optim.optimizers import make_optimizer
+from repro.configs.fedar_mnist import fleet_fed
+from repro.data.pipeline import federated_lm_corpus
+
+
+def tiny_lm_cfg(**over):
+    kw = dict(num_layers=1, d_model=64, d_ff=128, vocab_size=128,
+              num_heads=2, num_kv_heads=1)
+    kw.update(over)
+    return get_config("tinyllama-1.1b").reduced(**kw)
+
+
+def lm_fleet(num_clients, cfg, *, seed=0, poisoners=(), **fed_over):
+    fed_kw = dict(local_epochs=1, local_batch_size=4, timeout=1e9,
+                  defense="none", seed=seed)
+    fed_kw.update(fed_over)
+    fed = fleet_fed(num_clients, **fed_kw)
+    engine = FedAREngine(LMClientModel(cfg), fed, TaskRequirement(), lr=0.05)
+    data, meta = federated_lm_corpus(
+        num_clients, vocab=cfg.vocab_size, seq=32, samples_per_client=8,
+        topics=4, seed=seed, poisoners=poisoners,
+    )
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    eval_set = {k: jnp.asarray(v) for k, v in meta["eval"].items()}
+    return engine, data, eval_set
 
 
 def test_train_driver_runs_and_learns():
@@ -24,65 +40,72 @@ def test_train_driver_runs_and_learns():
 
     state = main([
         "--arch", "tinyllama-1.1b", "--steps", "25", "--batch", "8",
-        "--seq", "64", "--cohorts", "4", "--lr", "3e-3",
+        "--seq", "64", "--lr", "3e-3",
     ])
     assert int(state.step) == 25
 
 
-def test_fedar_vs_baseline_both_converge():
-    cfg = get_config("gemma3-1b").reduced()
-    model = Model(cfg)
-    fed = FedConfig(timeout=2.0)
-    tc = TrainConfig(optimizer="adamw", lr=2e-3)
-    opt = make_optimizer(tc)
+def test_fedar_vs_baseline_lm_both_converge():
+    """Transformer clients through the ONE engine: the FedAR aggregation
+    (trust/straggler path, sketched defense) and the plain-FedAvg baseline
+    both reduce the held-out LM loss — no separate cohort step exists."""
+    cfg = tiny_lm_cfg()
     losses = {}
-    for name, baseline in [("fedar", False), ("baseline", True)]:
-        params = model.init_params(jax.random.PRNGKey(0))
-        state = TrainState(params, opt.init(params), init_cohorts(4, fed),
-                           jnp.int32(0))
-        step = jax.jit(build_fedar_train_step(model, fed, tc, 4, baseline=baseline))
-        ls = []
-        for i, b in enumerate(lm_batches(cfg, batch=8, seq=64, steps=15, seed=1)):
-            b = {k: jnp.asarray(v) for k, v in b.items()}
-            state, m = step(state, b, jax.random.PRNGKey(i))
-            ls.append(float(m["loss"]))
-        losses[name] = ls
+    for name, kw in [
+        ("fedar", dict(aggregation="fedar", defense="foolsgold_sketch",
+                       timeout=10.0)),
+        ("baseline", dict(aggregation="fedavg", defense="none")),
+    ]:
+        engine, data, eval_set = lm_fleet(6, cfg, seed=1, **kw)
+        state = engine.init_state()
+        state, outs = engine.run(state, data, rounds=4, eval_set=eval_set)
+        losses[name] = np.asarray(outs.loss)
+        assert np.isfinite(losses[name]).all()
     assert losses["fedar"][-1] < losses["fedar"][0]
     assert losses["baseline"][-1] < losses["baseline"][0]
 
 
-def test_shard_map_local_rounds():
-    """True E>1 local-SGD divergence + trust-weighted psum on a host mesh."""
-    cfg = get_config("tinyllama-1.1b").reduced(num_layers=1, d_model=64,
-                                               d_ff=128, vocab_size=128,
-                                               num_heads=2, num_kv_heads=1)
-    model = Model(cfg)
-    fed = FedConfig()
-    tc = TrainConfig(optimizer="sgd", lr=1e-2, remat=False)
-    mesh = jax.make_mesh((1,), ("data",))
-    C = 2
-    round_fn = build_fedar_local_rounds(model, fed, tc, mesh, C, local_steps=3)
+def test_federated_lm_corpus_law():
+    """Corpus builder invariants: engine-ready shapes, sizes == mask rows,
+    per-seed determinism, and corpus_skew actually skews topics across
+    clients (some client's topic histogram far from uniform)."""
+    N, S = 8, 24
+    data, meta = federated_lm_corpus(
+        N, vocab=128, seq=S, samples_per_client=10, topics=4, seed=5,
+    )
+    n_max = data["tokens"].shape[1]
+    assert data["tokens"].shape == (N, n_max, S)
+    assert data["labels"].shape == (N, n_max, S)
+    assert data["tokens"].dtype == np.int32
+    if "mask" in data:
+        np.testing.assert_array_equal(
+            data["mask"].sum(axis=1).astype(np.float32), data["sizes"]
+        )
+        # padding rows are zeroed, real rows live in the prefix
+        assert data["mask"].dtype == bool
+    total = int(data["sizes"].sum())
+    assert 0 < total <= N * 10
 
-    params = model.init_params(jax.random.PRNGKey(0))
-    stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None], (C,) + t.shape), params)
-    base = lm_batches(cfg, batch=4, seq=32, steps=3, seed=0)
-    weights = jnp.ones((C,))
-    losses = []
-    for b in cohort_batches(base, C):
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        stacked, loss = round_fn(stacked, b, weights)
-        losses.append(float(loss))
-        # all cohort replicas must re-sync to the same global model
-        for leaf in jax.tree.leaves(stacked):
-            np.testing.assert_allclose(
-                np.asarray(leaf[0], np.float32), np.asarray(leaf[1], np.float32),
-                rtol=1e-5, atol=1e-6,
-            )
-    assert losses[-1] < losses[0] * 1.05
+    data2, _ = federated_lm_corpus(
+        N, vocab=128, seq=S, samples_per_client=10, topics=4, seed=5,
+    )
+    for k in data:
+        np.testing.assert_array_equal(data[k], data2[k])
+
+    # topic skew: under Dirichlet(0.3) at least one client concentrates
+    topic_of, plan = meta["topic_of"], meta["plan"]
+    fracs = []
+    for idx in plan.client_indices:
+        if len(idx) == 0:
+            continue
+        counts = np.bincount(topic_of[idx], minlength=4)
+        fracs.append(counts.max() / counts.sum())
+    assert max(fracs) > 0.5, "corpus_skew produced a near-uniform topic mix"
 
 
 def test_checkpoint_training_state_roundtrip(tmp_path):
     from repro.checkpoint.ckpt import restore, save
+    from repro.models.model import Model
 
     cfg = get_config("qwen2-moe-a2.7b").reduced()
     model = Model(cfg)
@@ -96,39 +119,21 @@ def test_checkpoint_training_state_roundtrip(tmp_path):
                                       np.asarray(b, np.float32))
 
 
-def test_trust_masked_step_ignores_straggler_gradients():
-    """A cohort that is always late must not influence params: poisoning the
-    straggler cohort's shard must leave the update unchanged."""
-    cfg = get_config("tinyllama-1.1b").reduced(num_layers=1, d_model=64,
-                                               d_ff=128, vocab_size=64,
-                                               num_heads=2, num_kv_heads=1)
-    model = Model(cfg)
-    tc = TrainConfig(optimizer="sgd", lr=1e-2, remat=False)
-    fed = FedConfig(timeout=0.9)
-    C = 4
-    step = build_fedar_train_step(model, fed, tc, C)
-    opt = make_optimizer(tc)
-    params = model.init_params(jax.random.PRNGKey(0))
-    cohorts = init_cohorts(C, fed)
-    # cohort 0: tiny compute/bandwidth -> latency far beyond timeout, always
-    cohorts = cohorts._replace(
-        compute=cohorts.compute.at[0].set(0.05),
-        bandwidth=cohorts.bandwidth.at[0].set(0.05),
-    )
-    key = jax.random.PRNGKey(5)
-    tok = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
-    lab = jax.random.randint(jax.random.fold_in(key, 1), (8, 32), 0, cfg.vocab_size)
+def test_straggler_client_cannot_influence_params():
+    """A force-straggled client is masked out of FedAR aggregation:
+    scrambling that client's labels must leave the new global params
+    bit-identical."""
+    cfg = tiny_lm_cfg(vocab_size=64)
+    engine, data, _ = lm_fleet(4, cfg, seed=2, timeout=10.0)
+    force = jnp.zeros(4, bool).at[0].set(True)
 
-    def run(poison):
-        t = tok
+    def one_round(poison):
+        d = dict(data)
         if poison:
-            t = t.at[:2].set(0)  # corrupt cohort 0's shard only
-        st = TrainState(params, opt.init(params), cohorts, jnp.int32(0))
-        st, m = jax.jit(step)(st, {"tokens": t, "labels": lab}, jax.random.PRNGKey(7))
-        assert int(m["stragglers"]) >= 1
-        return st.params
+            d["labels"] = d["labels"].at[0].set(0)
+        state = engine.init_state()
+        state, out = engine.step(state, d, force_straggler=force)
+        assert not bool(np.asarray(out.on_time)[0])
+        return np.asarray(state.params)
 
-    p_a, p_b = run(False), run(True)
-    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
-        np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b, np.float32), atol=1e-7)
+    np.testing.assert_array_equal(one_round(False), one_round(True))
