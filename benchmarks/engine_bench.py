@@ -19,12 +19,19 @@ invocation records the 1-vs-k scaling curve.
 The ``defense`` axis re-runs the scan engine per robust-defense strategy
 (none vs dense foolsgold vs the sketched cluster-aware variant), pricing
 the O(N*D) dense similarity gather against the (N, r) sketch.  The
-``scenario`` axis re-runs it per non-IID data scenario through the PACKED
-bucketed layout (``FederatedDataset.packed_arrays`` — the engine's
-padding-free hot path), at an equal per-client sample budget; ``dense``
-keeps the legacy wrap-padded fleet as the baseline.  The ``gated`` axis
-prices selection-gated local SGD (``FedConfig.select_frac``): the engine
-vmaps only the statically-capped selected cohort instead of all N clients.
+``scenario`` axis re-runs it per non-IID data scenario through the
+engine's AUTO layout pick (``FederatedDataset.engine_arrays`` — heavy
+quantity skew gets the packed bucketed layout, near-uniform fleets the
+dense rectangle), at an equal per-client sample budget; ``dense`` keeps
+the legacy wrap-padded fleet as the baseline.  The ``gated`` axis prices
+LAYOUT x GATING on ONE fixed quantity-skew fleet: ``dense_full`` /
+``dense_gated`` pay the rectangular pad-to-max layout, ``packed_full`` /
+``packed_gated`` the bucketed packed layout, and ``dense_gated`` vs
+``packed_gated`` isolates what the two-pass global cohort saves.  (The
+old axis compared the packed modes on a skewed fleet against dense modes
+on a UNIFORM fleet — a cross-dataset number that made the packed layout
+look like a tax; same-fleet is the honest layout comparison, and the
+perf gate enforces the ``packed_* >= dense_*`` win condition on it.)
 The ``model_family`` axis runs the same scan engine per client family — the
 paper's MNIST MLP vs a reduced transformer LM behind the ``ClientModel``
 boundary — so the gate also covers the pytree flatten/unflatten aggregation
@@ -76,7 +83,8 @@ FULL_REPEATS = 2
 
 
 def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none",
-          scenario: str | None = None, select_frac: float | None = None):
+          scenario: str | None = None, select_frac: float | None = None,
+          layout: str = "auto"):
     fed = fleet_fed(n, local_epochs=1, local_batch_size=20, defense=defense,
                     mesh_shape=mesh_shape, select_frac=select_frac)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
@@ -84,13 +92,15 @@ def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none",
         raw = scaled_fleet(n, samples_per_client=SAMPLES)
     else:
         # same per-client sample budget as the dense baseline, through the
-        # engine's packed bucketed layout: iid / label_skew / robot_drift
-        # isolate mask/schedule overhead, quantity_skew additionally pays
-        # its (<= 2x, batch-quantized) pad-to-bucket residual
-        shards = engine.comms.shards
+        # engine's auto layout pick (default): near-uniform scenarios keep
+        # the dense rectangle, heavy quantity skew gets the bucketed packed
+        # layout (<= 2x, batch-quantized pad-to-bucket residual).  An
+        # explicit ``layout`` pins one side of the pick (the gated axis
+        # prices dense vs packed on the same fleet).
         raw = make_federated(
             "digits", n, scenario=scenario, samples_per_client=SAMPLES
-        ).packed_arrays(shards=shards, quantum=fed.local_batch_size)
+        ).engine_arrays(shards=engine.comms.shards,
+                        quantum=fed.local_batch_size, layout=layout)
     data = jax.tree.map(jnp.asarray, raw)
     return engine, data
 
@@ -192,15 +202,28 @@ def bench_scenario(quick: bool = False) -> dict:
     return out
 
 
+GATED_MODES = (
+    ("dense_full", "dense", None),
+    ("dense_gated", "dense", GATED_FRAC),
+    ("packed_full", "packed", None),
+    ("packed_gated", "packed", GATED_FRAC),
+)
+
+
 def bench_gated(quick: bool = False) -> dict:
-    """rounds/sec of selection-gated local SGD (select_frac < 1: the scan
-    body vmaps only the statically-capped selected cohort) vs the full-N
-    vmap on the same fleet."""
+    """Layout x gating on ONE quantity-skew fleet: the rectangular
+    pad-to-max layout vs the bucketed packed layout, each full-N and
+    selection-gated (``select_frac``; gated runs the two-pass global
+    cohort on the packed side).  Same fleet for all four modes, so
+    ``packed_* >= dense_*`` is the layout win condition the perf gate
+    enforces — the packed layout must strictly dominate dense on the
+    skewed fleets the auto pick routes to it."""
     out = {}
     for n in QUICK_GATED_SIZES if quick else GATED_SIZES:
         out[str(n)] = {}
-        for mode, frac in (("full", None), ("gated", GATED_FRAC)):
-            engine, data = _make(n, select_frac=frac)
+        for mode, layout, frac in GATED_MODES:
+            engine, data = _make(n, scenario="quantity_skew",
+                                 select_frac=frac, layout=layout)
             out[str(n)][mode] = _time_scan(engine, data, rounds=8,
                                            repeats=_repeats(quick))
     return out
@@ -261,23 +284,6 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     return result
 
 
-def bench_gated_packed(quick: bool = False) -> dict:
-    """Gating composed with the packed bucketed layout (quantity_skew).
-    The per-bucket static cap is min(rows_b, C) — caps sum toward N across
-    buckets, so the composition saves less than dense gating; this axis
-    keeps that honest in BENCH_engine.json."""
-    out = {}
-    for n in QUICK_GATED_SIZES if quick else GATED_SIZES:
-        out[str(n)] = {}
-        for mode, frac in (("packed_full", None), ("packed_gated",
-                                                   GATED_FRAC)):
-            engine, data = _make(n, scenario="quantity_skew",
-                                 select_frac=frac)
-            out[str(n)][mode] = _time_scan(engine, data, rounds=8,
-                                           repeats=_repeats(quick))
-    return out
-
-
 def write_json(summary, devices=None, defense=None, scenario=None,
                gated=None, model_family=None,
                path: str = "BENCH_engine.json") -> None:
@@ -327,8 +333,6 @@ def main() -> None:
     defense = bench_defense(quick=quick)
     scenario = bench_scenario(quick=quick)
     gated = bench_gated(quick=quick)
-    for n, modes in bench_gated_packed(quick=quick).items():
-        gated.setdefault(n, {}).update(modes)
     family = bench_model_family(quick=quick)
     write_json(summary, devices, defense, scenario, gated, family)
     for k, per_n in devices.items():

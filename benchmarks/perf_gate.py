@@ -18,12 +18,27 @@ of line — the signature of a hot-path regression — still trips the gate.
 The floor keeps a regression broad enough to drag the median (one in the
 shared scan round body feeds nearly every axis) from hiding behind the
 calibration: past 2x the tolerance band the gate fires regardless.
+Calibration needs a population: with fewer than
+``MIN_CALIBRATION_AXES`` shared axes the median fresh/baseline ratio IS
+whatever regressed (one axis: the median equals the regression exactly;
+two: it splits the difference), so the gate silently falls back to
+``--absolute`` semantics — raw baseline comparison — instead of
+absorbing the slowdown into the "machine factor" up to the 2x floor.
 ``--absolute`` disables the calibration.  Tolerance
 defaults to 30%, sized for CI runner jitter on top of the quick preset's
 repeat-median timing (``engine_bench._time_scan`` medians 3 repeats in
 ``--quick`` and excludes compile + warm-up).  Handles both the current
 dict schema ({"rounds_per_sec": ..., "compile_sec": ...}) and the legacy
 bare-float leaves, so the gate keeps working across schema migrations.
+
+The gate also enforces the packed-layout WIN CONDITION on the fresh
+payload's ``gated_rounds_per_sec`` axis (same-fleet layout comparison,
+see ``engine_bench.bench_gated``): ``packed_full >= dense_full`` and
+``packed_gated >= dense_gated`` at every fleet size where both leaves
+exist — the bucketed layout plus the two-pass global cohort must strictly
+dominate the rectangular pad-to-max layout, not tax it, and a change that
+quietly re-opens the packed-layout tax fails CI even when every
+per-axis-vs-baseline check passes.
 """
 from __future__ import annotations
 
@@ -33,6 +48,18 @@ import sys
 from typing import Iterator, Tuple
 
 DEFAULT_TOLERANCE = 0.30
+
+# Below this many shared axes the median fresh/baseline ratio is not a
+# machine-speed estimate, it is the regression itself (one axis: median ==
+# that axis's ratio; two: their midpoint), so calibration would absorb any
+# slowdown up to its 2x-tolerance floor.  Fall back to absolute comparison.
+MIN_CALIBRATION_AXES = 3
+
+# gated_rounds_per_sec leaves compared same-fleet: packed must win.
+_WIN_PAIRS = (("packed_full", "dense_full"), ("packed_gated", "dense_gated"))
+# Timer jitter allowance for the win condition: a quick-preset repeat-median
+# still wobbles a few percent, and "packed >= dense" at parity would flake.
+WIN_SLACK = 0.05
 
 # summary-axis keys that are rounds/sec (the rest are ratios / compile times)
 _SUMMARY_RPS_KEYS = ("python_rounds_per_sec", "scan_rounds_per_sec")
@@ -77,7 +104,7 @@ def compare(baseline: dict, fresh: dict,
     new = dict(iter_axes(fresh))
     shared = sorted(set(base) & set(new))
     calibration = 1.0
-    if normalize and shared:
+    if normalize and len(shared) >= MIN_CALIBRATION_AXES:
         # median machine-speed ratio; capped at 1 so a fast box can't mask
         # a regression, and FLOORED at (1 - 2*tol) so a regression broad
         # enough to move the median (e.g. a slowdown in the shared scan
@@ -103,6 +130,27 @@ def compare(baseline: dict, fresh: dict,
         if new[path] < floor:
             failures.append((path, base_rps, new[path]))
     return failures, checked, missing, calibration
+
+
+def win_condition(fresh: dict, slack: float = WIN_SLACK):
+    """Packed-layout win condition on the fresh run alone: within every
+    ``gated_rounds_per_sec`` fleet size, each packed mode must be at least
+    ``(1 - slack)`` of its same-fleet dense counterpart.  Intra-run, so no
+    machine calibration applies — both sides of each pair ran on the same
+    box in the same process.  Returns (violations, checked) where each
+    violation is (fleet, packed_name, packed_rps, dense_name, dense_rps)."""
+    violations, checked = [], 0
+    for fleet, inner in fresh.get("gated_rounds_per_sec", {}).items():
+        if not isinstance(inner, dict):
+            continue
+        for packed_name, dense_name in _WIN_PAIRS:
+            p, d = _rps(inner.get(packed_name)), _rps(inner.get(dense_name))
+            if p is None or d is None:
+                continue
+            checked += 1
+            if p < (1.0 - slack) * d:
+                violations.append((fleet, packed_name, p, dense_name, d))
+    return violations, checked
 
 
 def main() -> int:
@@ -131,14 +179,25 @@ def main() -> int:
           f"(machine-speed calibration x{calibration:.2f})")
     for path in missing:
         print(f"  [warn] axis missing from fresh run: {path}")
+    wins, win_checked = win_condition(fresh)
+    print(f"perf gate: {win_checked} packed-vs-dense win pairs checked "
+          f"(intra-run, {WIN_SLACK:.0%} slack)")
+    rc = 0
     if failures:
         print("REGRESSIONS (fresh < (1 - tol) * baseline):")
         for path, b, n in failures:
             print(f"  {path}: {b:.2f} -> {n:.2f} rounds/sec "
                   f"({n / b - 1.0:+.0%})")
-        return 1
-    print("perf gate: OK")
-    return 0
+        rc = 1
+    if wins:
+        print("PACKED-LAYOUT TAX (packed mode slower than same-fleet dense):")
+        for fleet, pn, p, dn, d in wins:
+            print(f"  gated_rounds_per_sec/{fleet}: {pn} {p:.2f} < "
+                  f"{dn} {d:.2f} rounds/sec")
+        rc = 1
+    if rc == 0:
+        print("perf gate: OK")
+    return rc
 
 
 if __name__ == "__main__":

@@ -11,7 +11,11 @@ network — through a named non-IID ``--scenario`` (``iid`` | ``label_skew``
 | ``quantity_skew`` | ``robot_drift``).  ``--devices k`` shards the engine's
 round loop over k client shards (``shard_map`` over a ``clients`` mesh); on
 a CPU-only host it forces k fake host devices via XLA_FLAGS, which is why
-jax is imported only after argument parsing.
+jax is imported only after argument parsing.  A fleet that doesn't divide
+by ``k`` is padded with inert dummy clients (zero aggregation weight).
+The engine picks the client-data layout — rectangular pad-to-max vs the
+bucketed packed layout — per fleet from its padding-waste estimate;
+``--no-packed`` / ``--packed`` force it (numerics identical either way).
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--clients 128]
       PYTHONPATH=src python examples/quickstart.py --clients 128 --devices 8
@@ -42,11 +46,12 @@ def main():
     ap.add_argument("--samples", type=int, default=300,
                     help="samples per client")
     ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="feed pool datasets through the bucketed packed "
-                         "layout (pad-to-bucket, not pad-to-max; "
-                         "bit-identical numerics, less padded compute). "
-                         "--no-packed keeps the rectangular layout")
+                    default=None,
+                    help="force the bucketed packed layout on or off; by "
+                         "default the engine picks per fleet from the "
+                         "padding-waste estimate (scenarios.pick_layout: "
+                         "bit-identical numerics either way). --no-packed "
+                         "forces the rectangular pad-to-max layout")
     ap.add_argument("--select_frac", type=float, default=None,
                     help="selection-gated local SGD: statically cap the "
                          "SGD cohort at ceil(frac * N) and skip unselected "
@@ -61,9 +66,9 @@ def main():
     args = ap.parse_args()
 
     if args.devices > 1:
-        if args.clients % args.devices:
-            ap.error(f"--clients {args.clients} must divide by "
-                     f"--devices {args.devices}")
+        # a non-divisible fleet is padded below with inert dummy clients
+        # (FederatedDataset.padded_to: all-False masks, zero aggregation
+        # weight), so no divisibility check here.
         # must land before jax initializes its backends
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
@@ -88,23 +93,6 @@ def main():
         ap.error(f"--scenario/--alpha apply only to the pool datasets "
                  f"(digits/mnist/emnist), not to dataset={name!r}")
 
-    # the paper's B=20, E=5 setting, at any fleet size.  The paper's 12
-    # heterogeneous robots take the dense FoolsGold statistic; the tiled
-    # scaled fleet has many honest clients per Table II profile, where the
-    # dense max-cosine misfires — engine scale defaults to the
-    # cluster-aware sketched defense (O(N*r) payload, honest clusters
-    # pardoned by multiplicity; see core/defense.py)
-    fed = fleet_fed(args.clients, local_epochs=5, local_batch_size=20,
-                    timeout=10.0,
-                    defense="foolsgold" if args.clients == 12
-                    else "foolsgold_sketch",
-                    select_frac=args.select_frac,
-                    mesh_shape=args.devices if args.devices > 1 else None)
-    server = FedARServer(MnistConfig(), fed, TaskRequirement())
-    if server.mesh is not None:
-        print(f"mesh: {server.mesh.devices.size} client shards "
-              f"x {args.clients // server.mesh.devices.size} clients")
-
     kw = {}
     if name in ("digits", "mnist", "emnist"):
         kw["scenario"] = args.scenario or "label_skew"
@@ -121,22 +109,42 @@ def main():
               "deterministic offline synthetic fallback")
     print(f"[data] dataset={ds.name} scenario={ds.scenario or '-'} "
           f"shards={ds.x.shape} mean n_u={ds.sizes.mean():.0f}")
-    if args.packed and name in ("digits", "mnist", "emnist"):
-        # bucketed packed layout: pad-to-bucket instead of pad-to-max, so
-        # local-SGD compute tracks the real sample volume (bit-identical
-        # round numerics; see FederatedDataset.packed_arrays)
-        import jax
+    if args.devices > 1 and ds.num_clients % args.devices:
+        # non-divisible fleet: pad with inert dummy clients (all-False
+        # masks, exactly-zero aggregation weight) so the mesh shards evenly
+        ds = ds.padded_to(args.devices)
+        print(f"[data] fleet padded {args.clients} -> {ds.num_clients} "
+              f"clients to divide by {args.devices} shards")
 
-        raw = ds.packed_arrays(
-            shards=server.mesh.devices.size if server.mesh is not None
-            else 1,
-            quantum=fed.local_batch_size,
-        )
-        widths = [xb.shape[1] for xb in raw["packed"]["x"]]
-        print(f"[data] packed into {len(widths)} buckets, widths {widths}")
-        data = jax.tree.map(jnp.asarray, raw)
+    # the paper's B=20, E=5 setting, at any fleet size.  The paper's 12
+    # heterogeneous robots take the dense FoolsGold statistic; the tiled
+    # scaled fleet has many honest clients per Table II profile, where the
+    # dense max-cosine misfires — engine scale defaults to the
+    # cluster-aware sketched defense (O(N*r) payload, honest clusters
+    # pardoned by multiplicity; see core/defense.py)
+    fed = fleet_fed(ds.num_clients, local_epochs=5, local_batch_size=20,
+                    timeout=10.0,
+                    defense="foolsgold" if args.clients == 12
+                    else "foolsgold_sketch",
+                    select_frac=args.select_frac,
+                    mesh_shape=args.devices if args.devices > 1 else None)
+    server = FedARServer(MnistConfig(), fed, TaskRequirement())
+    if server.mesh is not None:
+        print(f"mesh: {server.mesh.devices.size} client shards "
+              f"x {ds.num_clients // server.mesh.devices.size} clients")
+
+    # dense vs bucketed-packed is the engine's call (pick_layout on the
+    # fleet's padding-waste estimate) unless --packed / --no-packed forces
+    # it; either layout is bit-identical round numerics
+    layout = ("auto" if args.packed is None
+              else "packed" if args.packed else "dense")
+    data = server.engine.prepare_data(ds, layout=layout)
+    if "packed" in data:
+        widths = [xb.shape[1] for xb in data["packed"]["x"]]
+        print(f"[data] layout=packed: {len(widths)} buckets, "
+              f"widths {widths}")
     else:
-        data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
+        print(f"[data] layout=dense: pad-to-max {data['x'].shape[1]}")
     # evaluate on the held-out split of the same source (test IDX files when
     # cached, the synthetic generator otherwise)
     eval_name = name if name in ("mnist", "emnist") else "synthetic"

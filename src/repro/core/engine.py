@@ -381,17 +381,167 @@ class FedAREngine:
         ].set(jnp.arange(cap, dtype=jnp.int32), mode="drop")
         return aug[inv]
 
+    def _ragged_block_sgd(self, g_flat, blocks):
+        """Local SGD over a list of rectangular client blocks of differing
+        widths -> concatenated (sum rows, D) flat local params, in block
+        order.  With the kernel route resolved, the model's
+        ``fused_ragged_update`` runs ALL blocks inside ONE ragged-grid
+        ``pallas_call`` (a single launch for the whole bucketed layout —
+        no per-bucket dispatch); the XLA route keeps one vmap per block
+        (XLA cannot fuse across the differing widths)."""
+        if self._sgd_kernel:
+            fn = getattr(self.model, "fused_ragged_update", None)
+            if fn is not None:
+                fused = fn(
+                    g_flat, blocks, lr=self.lr,
+                    batch_size=self.fed.local_batch_size,
+                    epochs=self.fed.local_epochs,
+                )
+                if fused is not None:
+                    return fused
+        return jnp.concatenate(
+            [self._block_sgd(g_flat, f, m) for f, m in blocks]
+        )
+
+    @staticmethod
+    def _desc_order(packed) -> list:
+        """Bucket indices sorted widest-first — the order the two-pass
+        cohort walks (and the flat sample views concatenate in)."""
+        return sorted(
+            range(len(packed["x"])),
+            key=lambda b: -packed["x"][b].shape[1],
+        )
+
+    def _with_flat_packed(self, data):
+        """Hoist the loop-invariant, descending-width flat sample views
+        out of the round scan: the two-pass gated gather addresses samples
+        through one flat (S_loc, dim) buffer; rebuilding that concat every
+        round would put a copy of the whole sample set on the hot path.
+        Called by both entry points after entering ``shard_map`` (the views
+        are shard-local) but before the scan body."""
+        if "packed" not in data or self.cohort_cap is None:
+            return data
+        packed = dict(data["packed"])
+        desc = self._desc_order(packed)
+        dim = packed["x"][0].shape[2]
+        packed["flat"] = (
+            jnp.concatenate(
+                [packed["x"][b].reshape(-1, dim) for b in desc]
+            ),
+            jnp.concatenate([packed["y"][b].reshape(-1) for b in desc]),
+        )
+        out = dict(data)
+        out["packed"] = packed
+        return out
+
+    def _packed_round_masks(self, packed, round_idx, order):
+        """This round's effective per-bucket sample masks (static mask &
+        the drift schedule's active window), in ``order``."""
+        masks = []
+        for b in order:
+            m = packed["mask"][b]
+            if "round_mask" in packed:
+                rm = packed["round_mask"][b]
+                win = jax.lax.dynamic_index_in_dim(
+                    rm, jnp.remainder(round_idx, rm.shape[0]), 0,
+                    keepdims=False,
+                )
+                m = m & win
+            masks.append(m)
+        return masks
+
+    def _packed_cohort_plan(self, widths, rows) -> list:
+        """Static slot plan of the two-pass global cohort: ONE allocation
+        of ``min(cohort_cap, sum rows)`` slots across all buckets, widest
+        bucket first — not per-bucket ``min(rows_b, C)`` caps that sum
+        toward N.  Soundness: at most C clients are selected per shard and
+        slots are granted widest-first, so the j-th widest selected row
+        always lands on a slot at least as wide as its own bucket."""
+        plan, remaining = [], self.cohort_cap
+        for b in sorted(range(len(widths)), key=lambda i: -widths[i]):
+            take = min(rows[b], remaining)
+            if take > 0:
+                plan.append((b, take))
+                remaining -= take
+        return plan
+
+    def _packed_gated_locals(self, g_flat, packed, sel_loc, round_idx):
+        """Two-pass selection-gated ClientUpdate over the packed layout.
+
+        Pass 1 (global count): ONE stable argsort over every row of every
+        bucket, keyed selected-first — rows arrive bucket-descending, so
+        the selected prefix is ordered widest-first.  Pass 2 (one capped
+        gather): the static slot plan (``_packed_cohort_plan``) slices that
+        prefix into per-width slot groups and gathers each group's samples
+        from the flat descending-width buffer (clamped reads past a row's
+        own storage are masked off, and a narrower client inside a wider
+        slot just runs extra all-masked batches — exact no-ops), so gated
+        compute tracks the top-C bucket widths instead of summing
+        per-bucket caps toward N.  Returns ``(locals_c, cohort)``."""
+        desc = self._desc_order(packed)
+        widths = [packed["x"][b].shape[1] for b in desc]
+        rows = [packed["x"][b].shape[0] for b in desc]
+        perm_d = jnp.concatenate([packed["perm"][b] for b in desc])
+        valid_d = jnp.concatenate([packed["valid"][b] for b in desc])
+        act_d = jnp.concatenate([packed["act"][b] for b in desc])
+        masks = self._packed_round_masks(packed, round_idx, desc)
+        mf = jnp.concatenate([m.reshape(-1) for m in masks])
+        flat = packed.get("flat")
+        if flat is None:  # entry points hoist this; direct calls build it
+            dim = packed["x"][0].shape[2]
+            flat = (
+                jnp.concatenate(
+                    [packed["x"][b].reshape(-1, dim) for b in desc]
+                ),
+                jnp.concatenate(
+                    [packed["y"][b].reshape(-1) for b in desc]
+                ),
+            )
+        xf, yf = flat
+        # static per-row storage geometry of the descending concat
+        row_w = np.repeat(widths, rows).astype(np.int32)
+        row_off = np.concatenate(
+            [np.arange(r, dtype=np.int64) * w for w, r in zip(widths, rows)]
+        )
+        row_off += np.repeat(
+            np.cumsum([0] + [w * r for w, r in zip(widths, rows)][:-1]),
+            rows,
+        )
+        row_off = row_off.astype(np.int32)
+
+        sel_rows = sel_loc[perm_d] & valid_d
+        order = jnp.argsort(jnp.where(sel_rows, 0, 1))
+        blocks, off = [], 0
+        plan = self._packed_cohort_plan(widths, rows)
+        for b, take in plan:
+            wb = widths[b]
+            idx = order[off : off + take]
+            off += take
+            pos = jnp.arange(wb, dtype=jnp.int32)
+            gidx = jnp.asarray(row_off)[idx][:, None] + pos[None, :]
+            m_g = mf[gidx] & (pos[None, :] < jnp.asarray(row_w)[idx][:, None])
+            fields = dict(
+                zip(self.model.data_keys, (xf[gidx], yf[gidx], act_d[idx]))
+            )
+            blocks.append((fields, m_g))
+        locals_c = self._ragged_block_sgd(g_flat, blocks)
+        slots = order[:off]
+        cohort = (perm_d[slots], sel_rows[slots])
+        return locals_c, cohort
+
     def _packed_locals(self, g_flat, packed, selected, round_idx):
         """ClientUpdate over the bucketed packed layout
         (``FederatedDataset.packed_arrays``) -> (N_loc, D) post-SGD flat
-        local params in canonical order: one block-SGD call per size
-        bucket — cost tracks the bucket widths (<= 2x the real samples)
-        instead of N * n_max — concatenated in packed order and restored
-        by a single gather through the precomputed inverse permutation.
-        Dummy pad rows carry an all-False mask (and ``inv`` never points
-        at them); with ``select_frac`` set each bucket additionally gates
-        down to its selected rows and unselected clients gather the
-        untouched global params (delta exactly zero).
+        local params in canonical order: block SGD per size bucket (ONE
+        fused ragged-grid launch on the kernel route) — cost tracks the
+        bucket widths (<= 2x the real samples) instead of N * n_max —
+        concatenated in packed order and restored by a single gather
+        through the precomputed inverse permutation.  Dummy pad rows carry
+        an all-False mask (and ``inv`` never points at them); with
+        ``select_frac`` set the two-pass global cohort
+        (``_packed_gated_locals``) gates SGD down to one globally-capped
+        slot set and unselected clients gather the untouched global params
+        (delta exactly zero).
 
         Returns ``(locals_flat, locals_c, cohort)``: the canonical
         (N_loc, D) post-SGD params, plus — in gated mode — the compact
@@ -400,36 +550,25 @@ class FedAREngine:
         ungated)."""
         sel_loc = self.comms.local(selected)
         n_loc = sel_loc.shape[0]
-        parts, canon, valids = [], [], []
-        for b in range(len(packed["x"])):
-            x, y = packed["x"][b], packed["y"][b]
-            m, perm = packed["mask"][b], packed["perm"][b]
-            valid, act = packed["valid"][b], packed["act"][b]
-            if "round_mask" in packed:
-                rm = packed["round_mask"][b]
-                win = jax.lax.dynamic_index_in_dim(
-                    rm, jnp.remainder(round_idx, rm.shape[0]), 0,
-                    keepdims=False,
-                )
-                m = m & win
-            # packed buckets carry (x, y, act) tuples; match them to the
-            # model's field names positionally (the packed layout is only
-            # built for ``packed_supported`` families)
-            fields = dict(zip(self.model.data_keys, (x, y, act)))
-            if self.cohort_cap is None:
-                parts.append(self._block_sgd(g_flat, fields, m))
-            else:
-                sel_b = sel_loc[perm] & valid
-                idx, locals_c, vcoh = self._gated_block_locals(
-                    g_flat, fields, m, sel_b
-                )
-                parts.append(locals_c)
-                canon.append(perm[idx])
-                valids.append(vcoh)
         if self.cohort_cap is None:
-            return jnp.concatenate(parts)[packed["inv"]], None, None
-        locals_c = jnp.concatenate(parts)
-        cohort = (jnp.concatenate(canon), jnp.concatenate(valids))
+            masks = self._packed_round_masks(
+                packed, round_idx, range(len(packed["x"]))
+            )
+            blocks = [
+                (
+                    dict(zip(
+                        self.model.data_keys,
+                        (packed["x"][b], packed["y"][b], packed["act"][b]),
+                    )),
+                    masks[b],
+                )
+                for b in range(len(packed["x"]))
+            ]
+            locals_cat = self._ragged_block_sgd(g_flat, blocks)
+            return locals_cat[packed["inv"]], None, None
+        locals_c, cohort = self._packed_gated_locals(
+            g_flat, packed, sel_loc, round_idx
+        )
         locals_flat = self._expand_cohort(
             locals_c, cohort[0], cohort[1], n_loc, g_flat
         )
@@ -697,7 +836,8 @@ class FedAREngine:
                  train_flops: float):
         def body(state, data, eval_set, force_straggler):
             return self._round_step(
-                state, data, eval_set, force_straggler, train_flops
+                state, self._with_flat_packed(data), eval_set,
+                force_straggler, train_flops,
             )
 
         return self._shard(body, state, data, eval_set, force_straggler)
@@ -705,9 +845,11 @@ class FedAREngine:
     def _run_fn(self, state, data, eval_set, force_straggler, *, rounds: int,
                 train_flops: float):
         def scan_rounds(state, data, eval_set, force_straggler):
+            data_aug = self._with_flat_packed(data)
+
             def body(carry, _):
                 return self._round_step(
-                    carry, data, eval_set, force_straggler, train_flops
+                    carry, data_aug, eval_set, force_straggler, train_flops
                 )
 
             return jax.lax.scan(body, state, None, length=rounds)
@@ -749,6 +891,30 @@ class FedAREngine:
                 f"engine runs {self.comms.shards}; rebuild the packed "
                 f"layout for the active mesh"
             )
+
+    def prepare_data(self, ds, layout: str = "auto"):
+        """Build this engine's data dict from a ``FederatedDataset``,
+        picking dense-vs-packed PER FLEET from the ``scenarios.
+        padding_waste`` estimate (``pick_layout``) under this engine's
+        mesh shard count and batch quantum — heavy quantity skew gets the
+        padding-free bucketed layout, near-uniform fleets keep the cheaper
+        single-rectangle vmap.  ``layout`` in {"auto", "dense", "packed"}
+        overrides the pick.  The fleet must already be padded to the mesh
+        (``FederatedDataset.padded_to``) so its client count matches
+        ``FedConfig.num_clients``."""
+        if ds.num_clients != self.fed.num_clients:
+            raise ValueError(
+                f"dataset has {ds.num_clients} clients but FedConfig.num_"
+                f"clients={self.fed.num_clients}; pad the fleet first "
+                f"(FederatedDataset.padded_to(shards)) and build the config "
+                f"from the padded count"
+            )
+        raw = ds.engine_arrays(
+            shards=self.comms.shards,
+            quantum=self.fed.local_batch_size,
+            layout=layout,
+        )
+        return jax.tree.map(jnp.asarray, raw)
 
     def step(self, state, data, *, eval_set=None, force_straggler=None):
         """One jitted communication round -> (state, RoundOutputs)."""

@@ -35,7 +35,12 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from repro.data.federated import scaled_fleet, sybil_fleet, table2_fleet
-from repro.data.scenarios import make_scenario, plan_sizes
+from repro.data.scenarios import (
+    bucket_widths,
+    make_scenario,
+    pick_layout,
+    plan_sizes,
+)
 from repro.data.sources import ArraySource, get_source
 
 
@@ -86,6 +91,51 @@ class FederatedDataset:
         if self.round_mask is not None:
             out["round_mask"] = self.round_mask
         return out
+
+    # ------------------------------------------------------------------
+    def padded_to(self, multiple: int) -> "FederatedDataset":
+        """Pad the fleet with dummy clients to the next multiple of
+        ``multiple`` (the mesh shard count): dummies carry an all-False
+        sample mask (their local-SGD delta is exactly zero) and
+        ``sizes == 0`` — aggregation weights exactly zero — so a 500-robot
+        fleet runs on an 8-device mesh without renumbering anyone.  The
+        caller's ``FedConfig.num_clients`` must use the padded count
+        (``ds.num_clients`` after padding)."""
+        if multiple < 1:
+            raise ValueError(f"padded_to: multiple must be >= 1, got "
+                             f"{multiple}")
+        N = self.num_clients
+        pad = (-N) % multiple
+        if pad == 0:
+            return self
+        total = N + pad
+
+        def _rows(a, fill=0):
+            shape = (pad,) + a.shape[1:]
+            return np.concatenate([a, np.full(shape, fill, a.dtype)])
+
+        mask = (
+            np.ones((N, self.samples), bool) if self.mask is None
+            else self.mask
+        )
+        return FederatedDataset(
+            name=self.name,
+            x=_rows(self.x),
+            y=_rows(self.y),
+            sizes=_rows(self.sizes),
+            activations=_rows(self.activations),
+            scenario=self.scenario,
+            mask=_rows(mask, fill=False),
+            round_mask=None if self.round_mask is None else np.concatenate(
+                [self.round_mask,
+                 np.zeros((self.windows, pad, self.samples), bool)], axis=1
+            ),
+            poisoners=None if self.poisoners is None
+            else _rows(self.poisoners, fill=False),
+            fallback=self.fallback,
+            num_classes=self.num_classes,
+            meta={**self.meta, "real_clients": N, "padded_clients": pad},
+        )
 
     # ------------------------------------------------------------------
     def client_extents(self) -> np.ndarray:
@@ -139,22 +189,27 @@ class FederatedDataset:
         ``sizes`` keeps the true n_u aggregation weights and ``n_max`` the
         dense rectangle width (the virtual-latency model's FLOP count must
         not change with the physical layout, or packed and pad-to-max runs
-        would select different stragglers)."""
-        N, n = self.num_clients, self.samples
-        if shards < 1 or N % shards:
-            raise ValueError(
-                f"packed_arrays: num_clients={N} not divisible into "
-                f"{shards} shards"
+        would select different stragglers).
+
+        A fleet whose ``num_clients`` doesn't divide by ``shards`` is
+        padded with dummy clients first (``padded_to``: all-False mask,
+        exactly-zero aggregation weight); the returned dict then describes
+        the PADDED fleet, so the engine's ``FedConfig.num_clients`` must be
+        the padded count."""
+        if shards < 1:
+            raise ValueError(f"packed_arrays: shards must be >= 1, got "
+                             f"{shards}")
+        if self.num_clients % shards:
+            return self.padded_to(shards).packed_arrays(
+                shards=shards, min_width=min_width, quantum=quantum
             )
+        N, n = self.num_clients, self.samples
         blk = N // shards
         extent = self.client_extents()
-        if quantum:
-            raw = [
-                quantum * _next_pow2(-(-int(e) // quantum)) for e in extent
-            ]
-        else:
-            raw = [_next_pow2(e) for e in extent]
-        width = np.minimum([max(w, min_width) for w in raw], n).astype(int)
+        # the one shared width model (scenarios.bucket_widths) — the same
+        # numbers padding_waste / pick_layout estimate the layout with
+        width = bucket_widths(extent, n, min_width=min_width,
+                              quantum=quantum).astype(int)
         widths = sorted(set(width.tolist()))
         dim = self.x.shape[2]
         W = self.windows
@@ -220,6 +275,28 @@ class FederatedDataset:
             "activations": self.activations,
             "packed": packed,
         }
+
+    def engine_arrays(self, shards: int = 1, min_width: int = 16,
+                      quantum: Optional[int] = None,
+                      layout: str = "auto") -> dict:
+        """The engine data dict under a named layout: ``"dense"`` (the
+        rectangular ``arrays()`` view), ``"packed"`` (``packed_arrays``),
+        or ``"auto"`` — pick per fleet from the ``scenarios.padding_waste``
+        estimate (``pick_layout``): heavy quantity skew gets the bucketed
+        padding-free layout, near-uniform fleets keep the single-rectangle
+        vmap whose dispatch is cheaper than bucketing.  Fleets that don't
+        divide into ``shards`` are padded either way (``padded_to``)."""
+        if layout == "auto":
+            layout = pick_layout(self.client_extents(), self.samples,
+                                 min_width=min_width, quantum=quantum)
+        if layout == "packed":
+            return self.packed_arrays(shards=shards, min_width=min_width,
+                                      quantum=quantum)
+        if layout != "dense":
+            raise ValueError(
+                f"unknown layout {layout!r}: expected auto | dense | packed"
+            )
+        return self.padded_to(shards).arrays()
 
 
 BUILDERS: Dict[str, Callable] = {}

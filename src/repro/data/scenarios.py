@@ -57,21 +57,66 @@ def plan_sizes(plan: ScenarioPlan) -> np.ndarray:
     return np.asarray([len(ci) for ci in plan.client_indices], np.int64)
 
 
-def padding_waste(counts, n_max: Optional[int] = None) -> dict:
+def bucket_widths(counts, n_max: Optional[int] = None, *,
+                  min_width: int = 16,
+                  quantum: Optional[int] = None) -> np.ndarray:
+    """The ONE bucket-width model, shared by ``FederatedDataset.
+    packed_arrays`` (which builds the layout) and ``padding_waste`` /
+    ``pick_layout`` (which estimate its cost): per-client packed widths
+    as powers of two in sample units — or, with ``quantum`` set to the
+    local batch size, powers of two in BATCH units (local SGD's ceil-
+    batching makes batch grads the true cost unit) — merged up to
+    ``min_width`` and capped at the stored rectangle width ``n_max``."""
+    counts = np.maximum(np.asarray(counts, np.int64), 1)
+    if n_max is None:
+        n_max = int(counts.max())
+    if quantum:
+        raw = quantum * 2 ** np.ceil(
+            np.log2(np.maximum(-(-counts // quantum), 1))
+        ).astype(np.int64)
+    else:
+        raw = 2 ** np.ceil(np.log2(counts)).astype(np.int64)
+    return np.minimum(np.maximum(raw, min_width), n_max).astype(np.int64)
+
+
+def padding_waste(counts, n_max: Optional[int] = None, *,
+                  min_width: int = 16,
+                  quantum: Optional[int] = None) -> dict:
     """Padded-compute diagnostics for a set of client sizes: the ratio of
     padded to real samples under pad-to-max vs power-of-two bucketing.
     ``pad_to_max`` is what the rectangular (N, n_max) layout costs (the
-    ~n_max/mean blow-up quantity_skew pays); ``bucketed`` is bounded by 2x
-    because next_pow2(n) < 2n."""
+    ~n_max/mean blow-up quantity_skew pays); ``bucketed`` prices the
+    widths ``packed_arrays`` ACTUALLY builds — same ``min_width`` merge-up
+    and ``quantum`` batch-rounding (``bucket_widths``), so the auto layout
+    pick decides on the layout it would get, not an idealized pow2 one."""
     counts = np.maximum(np.asarray(counts, np.int64), 1)
     if n_max is None:
         n_max = int(counts.max())
     total = int(counts.sum())
-    widths = np.minimum(2 ** np.ceil(np.log2(counts)).astype(np.int64), n_max)
+    widths = bucket_widths(counts, n_max, min_width=min_width,
+                           quantum=quantum)
     return {
         "pad_to_max": len(counts) * n_max / total,
         "bucketed": int(widths.sum()) / total,
     }
+
+
+# the packed layout's bucketed dispatch + gather overhead is worth paying
+# once the dense rectangle wastes ~40%+ more padded compute than the buckets
+LAYOUT_WASTE_THRESHOLD = 1.4
+
+
+def pick_layout(counts, n_max: Optional[int] = None, *,
+                min_width: int = 16, quantum: Optional[int] = None,
+                threshold: float = LAYOUT_WASTE_THRESHOLD) -> str:
+    """``"packed"`` when the pad-to-max waste exceeds the bucketed waste by
+    ``threshold`` (the engine's dense-vs-packed auto pick), ``"dense"``
+    otherwise — near-uniform fleets (iid, label_skew at equal budgets) keep
+    the single-rectangle vmap, heavy quantity skew gets the buckets."""
+    waste = padding_waste(counts, n_max, min_width=min_width,
+                          quantum=quantum)
+    ratio = waste["pad_to_max"] / max(waste["bucketed"], 1e-9)
+    return "packed" if ratio >= threshold else "dense"
 
 
 SCENARIOS: Dict[str, Callable] = {}

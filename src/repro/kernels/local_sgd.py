@@ -17,6 +17,24 @@ no-op on the XLA path (the masked loss renormalizes to zero gradient), so
 padding — the residual <=2x pad-to-bucket waste of the packed layout
 becomes pure skipped tiles here.
 
+Two entry points share the batch body:
+
+``local_sgd_fused``        — one rectangular client block (R, n, I); the
+                             grid walks clients, each grid step keeps the
+                             whole sample slab in VMEM and ``fori_loop``s
+                             its epochs x batches.
+``local_sgd_fused_ragged`` — the WHOLE bucketed packed layout in ONE
+                             launch: clients of every width bucket are
+                             flattened to a single (T, B, I) batch-tile
+                             buffer, and a ``PrefetchScalarGridSpec`` grid
+                             (client, epoch, batch) streams each client's
+                             tiles through scalar-prefetched per-client
+                             tile offsets / batch counts.  Ragged widths
+                             become skipped grid steps instead of separate
+                             ``pallas_call`` dispatches, so the per-bucket
+                             launch + gather overhead of the packed layout
+                             disappears.
+
 The backward pass is written out by hand (softmax cross-entropy through the
 Table II per-robot hidden activation, ReLU or Softmax) and matches
 ``jax.grad`` of ``models.mnist.mnist_loss`` — pinned against the pure-jnp
@@ -48,6 +66,60 @@ def fused_fits_vmem(n: int, input_dim: int, hidden: int, classes: int,
     return 4 * (slab + params + grads) <= budget
 
 
+def _batch_body(xb, yb, mb, is_soft, w1o, b1o, w2o, b2o, *, lr):
+    """One masked SGD step against the params resident in the output VMEM
+    tiles (shared by the rectangular and the ragged-grid kernels).  An
+    all-padding batch is an exact no-op (the masked loss renormalizes to
+    zero gradient), so ``pl.when`` skips it entirely."""
+    cnt = jnp.sum(mb)
+
+    # masked tile skip: an all-padding batch is an exact no-op (the
+    # masked loss renormalizes to zero gradient), so don't compute it
+    @pl.when(cnt > 0.0)
+    def _():
+        w1, b1 = w1o[0], b1o[0]
+        w2, b2 = w2o[0], b2o[0]
+        hpre = jax.lax.dot_general(
+            xb, w1, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + b1[None, :]
+        h = jnp.where(
+            is_soft, jax.nn.softmax(hpre, axis=-1),
+            jnp.maximum(hpre, 0.0),
+        )
+        logits = jax.lax.dot_general(
+            h, w2, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + b2[None, :]
+        # d(masked CE)/d(logits) = (softmax - onehot) * m / sum(m)
+        p = jax.nn.softmax(logits, axis=-1)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        onehot = (col == yb[:, None]).astype(jnp.float32)
+        gl = (p - onehot) * (mb / jnp.maximum(cnt, 1.0))[:, None]
+        dw2 = jax.lax.dot_general(
+            h, gl, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        db2 = jnp.sum(gl, axis=0)
+        dh = jax.lax.dot_general(
+            gl, w2, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # back through the Table II hidden activation
+        dsoft = h * (dh - jnp.sum(dh * h, axis=-1, keepdims=True))
+        drelu = dh * (hpre > 0.0)
+        dhp = jnp.where(is_soft, dsoft, drelu)
+        dw1 = jax.lax.dot_general(
+            xb, dhp, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        db1 = jnp.sum(dhp, axis=0)
+        w1o[0] = w1 - lr * dw1
+        b1o[0] = b1 - lr * db1
+        w2o[0] = w2 - lr * dw2
+        b2o[0] = b2 - lr * db2
+
+
 def _sgd_kernel(act_ref, x_ref, y_ref, m_ref, w1_ref, b1_ref, w2_ref, b2_ref,
                 w1o, b1o, w2o, b2o, *, lr, nb, epochs, batch):
     # one grid step == one client: params live in the output VMEM tiles and
@@ -64,54 +136,7 @@ def _sgd_kernel(act_ref, x_ref, y_ref, m_ref, w1_ref, b1_ref, w2_ref, b2_ref,
         xb = x_ref[0, pl.ds(start, batch), :]  # (B, I)
         yb = y_ref[0, pl.ds(start, batch)]  # (B,)
         mb = m_ref[0, pl.ds(start, batch)]  # (B,) float validity
-        cnt = jnp.sum(mb)
-
-        # masked tile skip: an all-padding batch is an exact no-op (the
-        # masked loss renormalizes to zero gradient), so don't compute it
-        @pl.when(cnt > 0.0)
-        def _():
-            w1, b1 = w1o[0], b1o[0]
-            w2, b2 = w2o[0], b2o[0]
-            hpre = jax.lax.dot_general(
-                xb, w1, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ) + b1[None, :]
-            h = jnp.where(
-                is_soft, jax.nn.softmax(hpre, axis=-1),
-                jnp.maximum(hpre, 0.0),
-            )
-            logits = jax.lax.dot_general(
-                h, w2, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ) + b2[None, :]
-            # d(masked CE)/d(logits) = (softmax - onehot) * m / sum(m)
-            p = jax.nn.softmax(logits, axis=-1)
-            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
-            onehot = (col == yb[:, None]).astype(jnp.float32)
-            gl = (p - onehot) * (mb / jnp.maximum(cnt, 1.0))[:, None]
-            dw2 = jax.lax.dot_general(
-                h, gl, (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            db2 = jnp.sum(gl, axis=0)
-            dh = jax.lax.dot_general(
-                gl, w2, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            # back through the Table II hidden activation
-            dsoft = h * (dh - jnp.sum(dh * h, axis=-1, keepdims=True))
-            drelu = dh * (hpre > 0.0)
-            dhp = jnp.where(is_soft, dsoft, drelu)
-            dw1 = jax.lax.dot_general(
-                xb, dhp, (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            db1 = jnp.sum(dhp, axis=0)
-            w1o[0] = w1 - lr * dw1
-            b1o[0] = b1 - lr * db1
-            w2o[0] = w2 - lr * dw2
-            b2o[0] = b2 - lr * db2
-
+        _batch_body(xb, yb, mb, is_soft, w1o, b1o, w2o, b2o, lr=lr)
         return carry
 
     jax.lax.fori_loop(0, epochs * nb, step, 0)
@@ -179,6 +204,120 @@ def local_sgd_fused(w1, b1, w2, b2, x, y, act, mask, *, lr: float,
         x.astype(jnp.float32),
         y.astype(jnp.int32),
         mask,
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32).reshape(1, hid),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32).reshape(1, classes),
+    )
+    return {"w1": outs[0], "b1": outs[1], "w2": outs[2], "b2": outs[3]}
+
+
+def _ragged_kernel(act_ref, nb_ref, off_ref, x_ref, y_ref, m_ref,
+                   w1_ref, b1_ref, w2_ref, b2_ref,
+                   w1o, b1o, w2o, b2o, *, lr):
+    # grid = (client, epoch, batch): the output param tiles index by client
+    # only, so they stay resident in VMEM across a client's whole
+    # epochs x batches walk and spill back to HBM once per client
+    i, e, b = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((e == 0) & (b == 0))
+    def _():
+        w1o[0] = w1_ref[...]
+        b1o[...] = b1_ref[...]
+        w2o[0] = w2_ref[...]
+        b2o[...] = b2_ref[...]
+
+    # ragged skip: grid batch steps past this client's own batch count are
+    # no-ops (the index map clamps their tile fetch to a valid slot)
+    @pl.when(b < nb_ref[i])
+    def _():
+        _batch_body(
+            x_ref[0], y_ref[0], m_ref[0], act_ref[i] == 1,
+            w1o, b1o, w2o, b2o, lr=lr,
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "epochs", "nb_max", "interpret")
+)
+def local_sgd_fused_ragged(w1, b1, w2, b2, xt, yt, mt, act, nb, off, *,
+                           lr: float, epochs: int, nb_max: int,
+                           interpret: bool = False):
+    """The WHOLE ragged bucketed layout in ONE ``pallas_call``.
+
+    The caller flattens every width bucket into one batch-tile buffer:
+    ``xt`` (T, B, I) float, ``yt`` (T, B) int, ``mt`` (T, B) float validity
+    — client r's tiles are ``xt[off[r] : off[r] + nb[r]]``.  ``act`` (R,)
+    int per-client activation id, ``nb`` (R,) int32 per-client batch
+    count, ``off`` (R,) int32 per-client tile offset (all scalar-prefetched
+    so the grid's index maps can address each client's slab); ``nb_max``
+    is the static grid bound ``max(nb)``.
+
+    Grid (R, epochs, nb_max) — batch fastest, so each client's SGD walk is
+    sequential while params stay resident in its output VMEM tiles; steps
+    with ``b >= nb[r]`` (a narrower client's tail of the widest bucket's
+    schedule) skip via ``pl.when``, which is how a SINGLE launch covers
+    every bucket width with zero per-bucket dispatch.
+
+    Returns ``{"w1": (R, I, H), "b1": (R, H), "w2": (R, H, C),
+    "b2": (R, C)}`` — bit-identical to running ``local_sgd_fused`` per
+    bucket."""
+    R = act.shape[0]
+    batch, inp = xt.shape[1], xt.shape[2]
+    hid = w1.shape[1]
+    classes = w2.shape[1]
+    kernel = functools.partial(_ragged_kernel, lr=lr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R, epochs, nb_max),
+        in_specs=[
+            pl.BlockSpec(
+                (1, batch, inp),
+                lambda i, e, b, act, nb, off: (
+                    off[i] + jnp.minimum(b, nb[i] - 1), 0, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, batch),
+                lambda i, e, b, act, nb, off: (
+                    off[i] + jnp.minimum(b, nb[i] - 1), 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, batch),
+                lambda i, e, b, act, nb, off: (
+                    off[i] + jnp.minimum(b, nb[i] - 1), 0
+                ),
+            ),
+            pl.BlockSpec((inp, hid), lambda i, e, b, *_: (0, 0)),
+            pl.BlockSpec((1, hid), lambda i, e, b, *_: (0, 0)),
+            pl.BlockSpec((hid, classes), lambda i, e, b, *_: (0, 0)),
+            pl.BlockSpec((1, classes), lambda i, e, b, *_: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, inp, hid), lambda i, e, b, *_: (i, 0, 0)),
+            pl.BlockSpec((1, hid), lambda i, e, b, *_: (i, 0)),
+            pl.BlockSpec((1, hid, classes), lambda i, e, b, *_: (i, 0, 0)),
+            pl.BlockSpec((1, classes), lambda i, e, b, *_: (i, 0)),
+        ],
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, inp, hid), jnp.float32),
+            jax.ShapeDtypeStruct((R, hid), jnp.float32),
+            jax.ShapeDtypeStruct((R, hid, classes), jnp.float32),
+            jax.ShapeDtypeStruct((R, classes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        act.astype(jnp.int32),
+        nb.astype(jnp.int32),
+        off.astype(jnp.int32),
+        xt.astype(jnp.float32),
+        yt.astype(jnp.int32),
+        mt.astype(jnp.float32),
         w1.astype(jnp.float32),
         b1.astype(jnp.float32).reshape(1, hid),
         w2.astype(jnp.float32),

@@ -11,8 +11,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs.fedar_mnist import MnistConfig
-from repro.kernels.local_sgd import fused_fits_vmem, local_sgd_fused
+from repro.kernels.local_sgd import (
+    fused_fits_vmem,
+    local_sgd_fused,
+    local_sgd_fused_ragged,
+)
 from repro.models.client import ClientModel
 
 
@@ -191,6 +197,54 @@ class MnistClientModel(ClientModel):
         # flatten order must match ``flatten`` (dict leaves sort as
         # b1, b2, w1, w2)
         rows = x.shape[0]
+        return jnp.concatenate(
+            [new[k].reshape(rows, -1) for k in ("b1", "b2", "w1", "w2")],
+            axis=1,
+        )
+
+    def fused_ragged_update(self, global_flat, blocks, *, lr, batch_size,
+                            epochs):
+        """The whole bucketed packed layout — ``blocks`` is a list of
+        ``(fields, sample_mask)`` rectangles of differing widths — in ONE
+        ragged-grid ``pallas_call`` (``local_sgd_fused_ragged``): every
+        bucket's clients flatten into a single batch-tile buffer addressed
+        by scalar-prefetched per-client offsets, so one launch replaces the
+        per-bucket dispatch loop.  Returns the (sum rows, D) post-SGD flat
+        params in block order, or ``None`` when a batch tile would not fit
+        the kernel's VMEM budget (engine falls back to per-block vmaps)."""
+        cfg = self.cfg
+        if not fused_fits_vmem(
+            batch_size, cfg.input_dim, cfg.hidden, cfg.num_classes
+        ):
+            return None
+        xts, yts, mts, acts, nbs = [], [], [], [], []
+        for fields, m in blocks:
+            x, y = fields["x"], fields["y"]
+            rows_b, w = x.shape[0], x.shape[1]
+            nb = -(-w // batch_size)  # ceil: never drop real samples
+            pad = nb * batch_size - w
+            mm = jnp.ones(x.shape[:2], bool) if m is None else m
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+                y = jnp.pad(y, ((0, 0), (0, pad)))
+                mm = jnp.pad(mm, ((0, 0), (0, pad)))
+            xts.append(x.reshape(rows_b * nb, batch_size, -1))
+            yts.append(y.reshape(rows_b * nb, batch_size))
+            mts.append(mm.astype(jnp.float32).reshape(rows_b * nb,
+                                                      batch_size))
+            acts.append(fields["activations"])
+            nbs.append(np.full(rows_b, nb, np.int32))
+        nb_arr = np.concatenate(nbs)
+        off = np.concatenate([[0], np.cumsum(nb_arr)[:-1]]).astype(np.int32)
+        p = self._split_flat(global_flat)
+        new = local_sgd_fused_ragged(
+            p["w1"], p["b1"], p["w2"], p["b2"],
+            jnp.concatenate(xts), jnp.concatenate(yts), jnp.concatenate(mts),
+            jnp.concatenate(acts), jnp.asarray(nb_arr), jnp.asarray(off),
+            lr=lr, epochs=epochs, nb_max=int(nb_arr.max()),
+            interpret=jax.default_backend() != "tpu",
+        )
+        rows = nb_arr.shape[0]
         return jnp.concatenate(
             [new[k].reshape(rows, -1) for k in ("b1", "b2", "w1", "w2")],
             axis=1,

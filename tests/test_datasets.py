@@ -371,3 +371,68 @@ def test_pool_sources_thread_into_legacy_builders(tmp_path):
     assert data["x"].shape == (12, 30, 784)
     # robot 3 (0-indexed 2) holds only labels {0,1,2,3} per Table II
     assert set(np.unique(data["y"][2])) <= {0, 1, 2, 3}
+
+
+# ------------------------------------------------- layout width model / pick
+
+def test_bucket_widths_is_the_shared_model():
+    """One width model: ``padding_waste`` must price exactly the widths
+    ``packed_arrays`` builds — min_width merge-up and quantum batch-
+    rounding included — or the auto layout pick decides on a fleet layout
+    it would never get."""
+    from repro.data.scenarios import bucket_widths, padding_waste
+
+    counts = np.array([3, 3, 3, 3, 33, 33, 100, 100])
+    # min_width merge-up: a 3-sample client still costs a 16-wide row
+    w = bucket_widths(counts, 100, min_width=16)
+    np.testing.assert_array_equal(w[:4], 16)
+    # quantum: widths are pow2 in BATCH units (33 -> 2 batches of 20 = 40)
+    wq = bucket_widths(counts, 100, min_width=16, quantum=20)
+    assert wq[4] == 40 and wq[6] == 100  # capped at the rectangle width
+    # padding_waste prices those same widths, not idealized pow2 ones
+    waste = padding_waste(counts, 100, min_width=16)
+    assert waste["bucketed"] == pytest.approx(w.sum() / counts.sum())
+    wasteq = padding_waste(counts, 100, min_width=16, quantum=20)
+    assert wasteq["bucketed"] == pytest.approx(wq.sum() / counts.sum())
+    assert waste["pad_to_max"] == pytest.approx(8 * 100 / counts.sum())
+
+
+def test_packed_arrays_widths_match_bucket_widths():
+    from repro.data.scenarios import bucket_widths
+
+    ds = make_federated("digits", 16, scenario="quantity_skew",
+                        samples_per_client=40, seed=2)
+    pk = ds.packed_arrays(quantum=20)["packed"]
+    want = sorted(set(bucket_widths(ds.client_extents(), ds.samples,
+                                    quantum=20).tolist()))
+    assert [xb.shape[1] for xb in pk["x"]] == want
+
+
+def test_pick_layout_threshold():
+    from repro.data.scenarios import LAYOUT_WASTE_THRESHOLD, pick_layout
+
+    uniform = np.full(32, 64)
+    assert pick_layout(uniform, 64) == "dense"  # no waste to reclaim
+    skewed = np.array([4] * 28 + [512] * 4)
+    assert pick_layout(skewed, 512) == "packed"
+    assert pick_layout(skewed, 512, threshold=1e9) == "dense"
+    assert LAYOUT_WASTE_THRESHOLD > 1.0  # dense wins ties
+
+
+def test_engine_arrays_layouts():
+    """engine_arrays: dense == padded arrays(), packed == packed_arrays,
+    auto routes through pick_layout, junk layout raises."""
+    ds = make_federated("digits", 16, scenario="quantity_skew",
+                        samples_per_client=40, seed=4)
+    dense = ds.engine_arrays(layout="dense")
+    np.testing.assert_array_equal(dense["x"], ds.arrays()["x"])
+    packed = ds.engine_arrays(layout="packed", quantum=20)
+    assert "packed" in packed
+    auto = ds.engine_arrays(layout="auto", quantum=20)
+    assert ("packed" in auto) in (True, False)  # picked, not crashed
+    with pytest.raises(ValueError, match="unknown layout"):
+        ds.engine_arrays(layout="zigzag")
+    # iid at equal budgets is near-uniform: auto stays dense
+    flat = make_federated("digits", 16, scenario="iid",
+                          samples_per_client=40, seed=4)
+    assert "packed" not in flat.engine_arrays(layout="auto", quantum=20)

@@ -107,9 +107,9 @@ GATED_TRUST = np.array(
 GATED_FG_L2 = 8.843296871281623
 
 
-def _run_gated_packed(mesh_shape=None):
+def _run_gated_packed(mesh_shape=None, **fed_kw):
     fed = fleet_fed(12, defense="foolsgold_sketch", select_frac=0.5,
-                    mesh_shape=mesh_shape)
+                    mesh_shape=mesh_shape, **fed_kw)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
     ds = make_federated("digits", 12, scenario="quantity_skew",
                         samples_per_client=60, seed=7)
@@ -155,6 +155,15 @@ def test_golden_gated_packed_sharded():
     lands on the SAME pinned checksums within fp32 reduction tolerance."""
     engine, state = _run_gated_packed(mesh_shape=SHARDS)
     assert engine.mesh is not None and engine.mesh.devices.size == SHARDS
+    _assert_gated_golden(state)
+
+
+def test_golden_gated_packed_fused_ragged_kernel():
+    """``sgd_impl="kernel"`` routes every packed bucket through the ONE
+    ragged-grid ``pallas_call`` (``local_sgd_fused_ragged``, interpret mode
+    off-TPU); the fused launch must land on the same pinned checksums as
+    the vmapped reference path."""
+    _, state = _run_gated_packed(sgd_impl="kernel")
     _assert_gated_golden(state)
 
 

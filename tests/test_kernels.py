@@ -203,6 +203,68 @@ def test_fused_fits_vmem_bounds():
     assert not fused_fits_vmem(65536, 784, 128, 10)
 
 
+def _ragged_inputs(buckets, bs):
+    """Tile mixed-width buckets of (x, y, mask, act) into the flat
+    batch-tile buffer + per-row (nb, off) geometry the ragged kernel takes
+    (mirrors models.mnist.fused_ragged_update)."""
+    xts, yts, mts, acts, nbs = [], [], [], [], []
+    for x, y, m, a in buckets:
+        rows, w = x.shape[0], x.shape[1]
+        nb = w // bs
+        xts.append(x.reshape(rows * nb, bs, -1))
+        yts.append(y.reshape(rows * nb, bs))
+        mts.append(m.astype(jnp.float32).reshape(rows * nb, bs))
+        acts.append(a)
+        nbs.append(np.full(rows, nb, np.int32))
+    nb_arr = np.concatenate(nbs)
+    off = np.concatenate([[0], np.cumsum(nb_arr)[:-1]]).astype(np.int32)
+    return (jnp.concatenate(xts), jnp.concatenate(yts),
+            jnp.concatenate(mts), jnp.concatenate(acts),
+            jnp.asarray(nb_arr), jnp.asarray(off))
+
+
+def test_local_sgd_fused_ragged_matches_per_bucket():
+    """ONE ragged-grid launch over mixed-width buckets is bit-equal to the
+    per-bucket ``local_sgd_fused`` dispatch loop it replaces — including a
+    fully-masked dummy row (mesh fill) and buckets whose batch count sits
+    below ``nb_max`` (the grid's tail steps must be true no-ops)."""
+    from repro.kernels.local_sgd import local_sgd_fused_ragged
+
+    w1, b1, w2, b2 = _mlp(jax.random.PRNGKey(11))
+    bs = 4
+    k = jax.random.PRNGKey(12)
+    buckets = []
+    for bi, (rows, width) in enumerate([(2, 8), (3, 16), (2, 4)]):
+        kk = jax.random.fold_in(k, bi)
+        x = jax.random.normal(jax.random.fold_in(kk, 0), (rows, width, 16))
+        y = jax.random.randint(jax.random.fold_in(kk, 1), (rows, width),
+                               0, 10)
+        m = jax.random.bernoulli(jax.random.fold_in(kk, 2), 0.8,
+                                 (rows, width))
+        a = jax.random.randint(jax.random.fold_in(kk, 3), (rows,), 0, 2)
+        buckets.append([x, y, m, a])
+    buckets[0][2] = buckets[0][2].at[1].set(False)  # dummy: all-masked row
+    buckets[2][2] = buckets[2][2].at[0].set(False)  # all-masked whole batch
+    xt, yt, mt, act, nb_arr, off = _ragged_inputs(buckets, bs)
+    got = local_sgd_fused_ragged(
+        w1, b1, w2, b2, xt, yt, mt, act, nb_arr, off,
+        lr=0.1, epochs=2, nb_max=int(np.asarray(nb_arr).max()),
+        interpret=True,
+    )
+    r0 = 0
+    for x, y, m, a in buckets:
+        want = local_sgd_fused(w1, b1, w2, b2, x, y, a, m, lr=0.1,
+                               batch_size=bs, epochs=2, interpret=True)
+        for kk_ in ("w1", "b1", "w2", "b2"):
+            np.testing.assert_array_equal(
+                np.asarray(got[kk_][r0:r0 + x.shape[0]]),
+                np.asarray(want[kk_]),
+            )
+        r0 += x.shape[0]
+    # the dummy rows specifically came back as the untouched globals
+    np.testing.assert_array_equal(np.asarray(got["w1"][1]), np.asarray(w1))
+
+
 # ---------------------------------------------------------------------------
 # defense similarity block product
 # ---------------------------------------------------------------------------

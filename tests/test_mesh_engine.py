@@ -200,6 +200,68 @@ def test_sharded_packed_gated_matches_single_device():
                                    rtol=1e-4)
 
 
+def test_sharded_packed_gated_matches_dense_gated():
+    """The two-pass global cohort under sharding: selection is counted
+    globally and ONE capped gather builds the cohort, so packed+gated on
+    the 8-way mesh must land on the dense gated trajectory of the SAME
+    fleet — selection masks exact, params to fp32 psum tolerance."""
+    from repro.data.datasets import make_federated
+
+    n = 64
+    ds = make_federated(
+        "digits", n, scenario="quantity_skew", samples_per_client=24,
+        seed=11,
+    )
+
+    def run(layout, frac):
+        kw = dict(local_epochs=1, defense="foolsgold_sketch",
+                  select_frac=frac, mesh_shape=SHARDS)
+        e = FedAREngine(small_model(32), fleet_fed(n, **kw),
+                        TaskRequirement())
+        data = jax.tree.map(
+            jnp.asarray,
+            ds.engine_arrays(shards=SHARDS, quantum=20, layout=layout),
+        )
+        return e.run(e.init_state(), data, rounds=ROUNDS)
+
+    s_d, o_d = run("dense", 0.5)
+    s_p, o_p = run("packed", 0.5)
+    np.testing.assert_array_equal(np.asarray(o_d.selected),
+                                  np.asarray(o_p.selected))
+    np.testing.assert_array_equal(np.asarray(o_d.on_time),
+                                  np.asarray(o_p.on_time))
+    np.testing.assert_allclose(np.asarray(o_d.trust), np.asarray(o_p.trust),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_d.params),
+                               np.asarray(s_p.params), atol=1e-4, rtol=1e-4)
+
+
+def test_sharded_padded_fleet_via_prepare_data():
+    """A 60-robot fleet on an 8-way mesh: ``padded_to`` fills it to 64 with
+    inert dummies and ``prepare_data`` (auto layout) feeds both engines;
+    the mesh run matches the single-device engine on the padded fleet."""
+    from repro.data.datasets import make_federated
+
+    ds = make_federated(
+        "digits", 60, scenario="quantity_skew", samples_per_client=24,
+        seed=13,
+    ).padded_to(SHARDS)
+    assert ds.num_clients == 64
+    assert ds.meta["padded_clients"] == 4
+    kw = dict(local_epochs=1, defense="foolsgold_sketch")
+    e1 = FedAREngine(small_model(32), fleet_fed(64, **kw),
+                     TaskRequirement())
+    e8 = FedAREngine(small_model(32),
+                     fleet_fed(64, mesh_shape=SHARDS, **kw),
+                     TaskRequirement())
+    s1, o1 = e1.run(e1.init_state(), e1.prepare_data(ds), rounds=ROUNDS)
+    s8, o8 = e8.run(e8.init_state(), e8.prepare_data(ds), rounds=ROUNDS)
+    np.testing.assert_array_equal(np.asarray(o1.selected),
+                                  np.asarray(o8.selected))
+    np.testing.assert_allclose(np.asarray(s1.params),
+                               np.asarray(s8.params), atol=1e-4, rtol=1e-4)
+
+
 def test_sharded_robot_drift_schedule_matches_single_device():
     """The drift schedule's (W, N, n) round_mask shards its CLIENT axis
     (axis 1); the windowed round loop must reproduce the single-device

@@ -134,10 +134,56 @@ def test_packed_quantum_widths_are_batch_pow2():
         assert L == ds.samples or (L % 20 == 0 and nb & (nb - 1) == 0)
 
 
-def test_packed_shards_must_divide():
+def test_packed_shards_pad_non_divisible():
+    """A fleet that doesn't divide by ``shards`` no longer raises: it is
+    padded with inert dummy clients (``padded_to``) and the returned dict
+    describes the padded fleet."""
     ds = make_federated("digits", 16, scenario="iid", samples_per_client=20)
-    with pytest.raises(ValueError, match="divisible"):
-        ds.packed_arrays(shards=3)
+    out = ds.packed_arrays(shards=3)
+    assert out["sizes"].shape == (18,)
+    np.testing.assert_array_equal(out["sizes"][16:], 0.0)
+    pk = out["packed"]
+    assert int(pk["shards"]) == 3
+    total_valid = 0
+    for xb, valid in zip(pk["x"], pk["valid"]):
+        assert xb.shape[0] % 3 == 0  # shard-major rows still equalized
+        total_valid += int(valid.sum())
+    assert total_valid == 18  # dummies are real (inert) rows, not invalid
+    assert pk["inv"].shape == (18,)
+
+
+def test_padded_to_inert_dummies():
+    """``padded_to`` appends clients that can never train or weigh into
+    aggregation: all-False sample mask, exactly-zero sizes, zero-padded
+    drift schedule; a divisible fleet is returned unchanged."""
+    ds = make_federated("digits", 10, scenario="robot_drift",
+                        samples_per_client=24, seed=7)
+    assert ds.padded_to(5) is ds
+    pds = ds.padded_to(4)
+    assert pds.num_clients == 12
+    assert pds.meta["real_clients"] == 10 and pds.meta["padded_clients"] == 2
+    assert not pds.mask[10:].any()
+    np.testing.assert_array_equal(pds.sizes[10:], 0.0)
+    assert pds.round_mask.shape == (ds.windows, 12, ds.samples)
+    assert not pds.round_mask[:, 10:].any()
+    # real clients untouched
+    np.testing.assert_array_equal(pds.x[:10], ds.x)
+    np.testing.assert_array_equal(pds.sizes[:10], ds.sizes)
+    # extents: an all-False-mask dummy packs into the narrowest bucket
+    assert (pds.client_extents()[10:] == 1).all()
+
+
+def test_padded_fleet_packed_bit_identical():
+    """Dummy clients ride the packed + fused paths exactly like the dense
+    rectangle: all-False masks mean zero delta, zero sizes mean zero
+    aggregation weight, and the trajectories stay bit-equal."""
+    ds = make_federated("digits", 16, scenario="quantity_skew",
+                        samples_per_client=30, seed=5).padded_to(5)
+    assert ds.num_clients == 20
+    engine = _engine(20)
+    s0, _ = _run(engine, ds.arrays())
+    s1, _ = _run(engine, ds.packed_arrays())
+    _assert_states_equal(s0, s1)
 
 
 # ----------------------------------------------------- engine bit-identity

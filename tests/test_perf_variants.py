@@ -100,3 +100,72 @@ def test_defused_mamba_projection_sharding():
     # zamba2: d_inner = 7168 -> model 16 divides; st = 64 -> model divides
     assert leaf_spec((3584, 7168), 16, 16, skip_leading=False)[1] == "model"
     assert leaf_spec((3584, 64), 16, 16, skip_leading=False) == P("model", "data") or True
+
+
+# --------------------------------------------------------------- perf gate
+# The gate itself is perf infrastructure; its calibration and win-condition
+# logic is pure arithmetic, so pin it here next to the other perf contracts.
+
+def _gate_payload(leaves):
+    """{axis_leaf_name: rps} -> a minimal scenario-axis bench payload."""
+    return {"scenario_rounds_per_sec": {"s": dict(leaves)}}
+
+
+def test_perf_gate_calibration_needs_population():
+    """Below MIN_CALIBRATION_AXES shared axes the median fresh/baseline
+    ratio IS the regression, so the gate must fall back to absolute
+    comparison instead of 'calibrating' the slowdown away."""
+    from benchmarks.perf_gate import MIN_CALIBRATION_AXES, compare
+
+    assert MIN_CALIBRATION_AXES >= 2
+    # two shared axes, both uniformly halved: with a median-calibration the
+    # ratio 0.5 would clamp to the 0.4 floor and the floor test would pass
+    # (0.5 > 0.7 * 0.4); absolute semantics correctly flag both.
+    base = _gate_payload({"a": 10.0, "b": 20.0})
+    fresh = _gate_payload({"a": 5.0, "b": 10.0})
+    failures, checked, missing, calibration = compare(base, fresh, 0.30)
+    assert checked == 2 and not missing
+    assert calibration == 1.0  # fallback: no median applied
+    assert {p for p, _, _ in failures} == {
+        "scenario_rounds_per_sec/s/a", "scenario_rounds_per_sec/s/b",
+    }
+
+
+def test_perf_gate_calibration_applies_with_enough_axes():
+    """At >= MIN_CALIBRATION_AXES shared axes a uniform slowdown inside the
+    2x-tolerance band reads as a slower machine (the documented blind
+    spot), while a single outlier axis still trips the gate."""
+    from benchmarks.perf_gate import MIN_CALIBRATION_AXES, compare
+
+    names = [f"ax{i}" for i in range(MIN_CALIBRATION_AXES + 1)]
+    base = _gate_payload({n: 10.0 for n in names})
+    uniform = _gate_payload({n: 5.0 for n in names})
+    failures, _, _, calibration = compare(base, uniform, 0.30)
+    assert calibration == 0.5 and not failures
+    outlier = _gate_payload(
+        {n: (1.0 if n == names[0] else 10.0) for n in names}
+    )
+    failures, _, _, calibration = compare(base, outlier, 0.30)
+    assert calibration == 1.0
+    assert [p for p, _, _ in failures] == ["scenario_rounds_per_sec/s/ax0"]
+
+
+def test_perf_gate_win_condition():
+    """Packed modes must beat same-fleet dense modes within the fresh run;
+    pairs with a missing leaf are skipped, not failed."""
+    from benchmarks.perf_gate import win_condition
+
+    fresh = {"gated_rounds_per_sec": {
+        "128": {"dense_full": 10.0, "dense_gated": 20.0,
+                "packed_full": {"rounds_per_sec": 15.0}, "packed_gated": 8.0},
+        "512": {"dense_full": 4.0, "packed_full": 6.0},  # gated pair absent
+    }}
+    violations, checked = win_condition(fresh)
+    assert checked == 3  # 2 pairs at 128, 1 at 512
+    assert [(f, pn) for f, pn, _, _, _ in violations] == [
+        ("128", "packed_gated")
+    ]
+    # slack: parity-with-jitter is not a violation
+    fresh["gated_rounds_per_sec"]["128"]["packed_gated"] = 19.5
+    violations, _ = win_condition(fresh)
+    assert not violations
