@@ -35,7 +35,10 @@ perf gate enforces the ``packed_* >= dense_*`` win condition on it.)
 The ``model_family`` axis runs the same scan engine per client family — the
 paper's MNIST MLP vs a reduced transformer LM behind the ``ClientModel``
 boundary — so the gate also covers the pytree flatten/unflatten aggregation
-path.
+path.  The ``cohort`` axis prices the host-store cohort engine
+(``FedConfig.cohort_size``) at fleet sizes up to 1M clients x cohort sizes
+K — store-build time separate from steady rounds/sec — plus an in-run
+``resident`` N=2048 ceiling the gate's cohort win condition leans on.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
@@ -77,6 +80,11 @@ GATED_SIZES = (128, 512)
 QUICK_GATED_SIZES = (128,)
 GATED_FRAC = 0.5  # = client_fraction: cohort exactly covers the selection
 MODEL_FAMILY_SIZES = (12,)
+COHORT_FLEETS = (2048, 65536, 1_000_000)
+QUICK_COHORT_FLEETS = (2048, 65536)
+COHORT_SIZES = (256, 512)
+QUICK_COHORT_SIZES = (512,)
+COHORT_WIN_N = 2048  # fleet whose resident ceiling is re-measured in-run
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 QUICK_REPEATS = 3  # repeat-median absorbs CI runner jitter
 FULL_REPEATS = 2
@@ -260,6 +268,59 @@ def bench_model_family(quick: bool = False) -> dict:
     return out
 
 
+def _time_cohort(server, fleet, rounds: int, repeats: int) -> dict:
+    """Cohort-mode steady rounds/sec: the first (compile + first-touch)
+    round is excluded, then the median per-round cost over ``repeats``
+    timed batches.  Rounds keep advancing the store — each batch samples
+    fresh cohorts, so the number prices the real per-round pipeline
+    (host sampling + gather + jitted step + scatter)."""
+    t0 = time.perf_counter()
+    server.run(fleet, 1)
+    first = time.perf_counter() - t0
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        server.run(fleet, rounds)
+        times.append((time.perf_counter() - t0) / rounds)
+    steady = statistics.median(times)
+    return {
+        "rounds_per_sec": 1.0 / steady,
+        "compile_sec": round(max(0.0, first - steady), 3),
+    }
+
+
+def bench_cohort(quick: bool = False) -> dict:
+    """Host-store cohort engine: steady rounds/sec at fleet sizes N the
+    resident engine cannot hold x cohort sizes K, with the one-time store
+    build (host O(N) numpy tables + sub-engine init) reported separately
+    (``store_build_sec``).  The ``resident`` leaf re-measures the resident
+    scan engine at N=2048 in the SAME process — the intra-run ceiling the
+    perf gate's cohort win condition compares K=512 against (the cohort
+    engine does strictly less per-round work, so it must not lose)."""
+    from repro.core.fedar import FedARServer
+    from repro.data.datasets import VirtualFleet
+
+    out = {}
+    rounds = 4 if quick else 8
+    for n in QUICK_COHORT_FLEETS if quick else COHORT_FLEETS:
+        out[str(n)] = {}
+        fleet = VirtualFleet(n, samples_per_client=SAMPLES)
+        for k in QUICK_COHORT_SIZES if quick else COHORT_SIZES:
+            t0 = time.perf_counter()
+            fed = fleet_fed(n, local_epochs=1, local_batch_size=20,
+                            defense="none", cohort_size=k)
+            server = FedARServer(small_model(32), fed, TaskRequirement())
+            build = time.perf_counter() - t0
+            leaf = _time_cohort(server, fleet, rounds, _repeats(quick))
+            leaf["store_build_sec"] = round(build, 3)
+            out[str(n)][f"K{k}"] = leaf
+    engine, data = _make(COHORT_WIN_N)
+    out[str(COHORT_WIN_N)]["resident"] = _time_scan(
+        engine, data, rounds=4, repeats=_repeats(quick)
+    )
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -285,7 +346,7 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
 
 
 def write_json(summary, devices=None, defense=None, scenario=None,
-               gated=None, model_family=None,
+               gated=None, model_family=None, cohort=None,
                path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
@@ -298,6 +359,8 @@ def write_json(summary, devices=None, defense=None, scenario=None,
         payload["gated_rounds_per_sec"] = gated
     if model_family is not None:
         payload["model_family_rounds_per_sec"] = model_family
+    if cohort is not None:
+        payload["cohort_rounds_per_sec"] = cohort
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -334,7 +397,8 @@ def main() -> None:
     scenario = bench_scenario(quick=quick)
     gated = bench_gated(quick=quick)
     family = bench_model_family(quick=quick)
-    write_json(summary, devices, defense, scenario, gated, family)
+    cohort = bench_cohort(quick=quick)
+    write_json(summary, devices, defense, scenario, gated, family, cohort)
     for k, per_n in devices.items():
         for n, v in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / _rps(v), 1),
@@ -354,6 +418,10 @@ def main() -> None:
     for n, per_f in family.items():
         for fam, v in per_f.items():
             rows.append((f"engine_scan_N{n}_model_{fam}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
+    for n, per_k in cohort.items():
+        for k, v in per_k.items():
+            rows.append((f"engine_cohort_N{n}_{k}",
                          round(1e6 / _rps(v), 1), round(_rps(v), 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

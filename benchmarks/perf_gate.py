@@ -39,6 +39,13 @@ exist — the bucketed layout plus the two-pass global cohort must strictly
 dominate the rectangular pad-to-max layout, not tax it, and a change that
 quietly re-opens the packed-layout tax fails CI even when every
 per-axis-vs-baseline check passes.
+
+A second intra-run invariant covers the host-store cohort engine
+(``cohort_rounds_per_sec``): wherever a fleet entry carries a same-process
+``resident`` ceiling, every cohort-size leaf must keep at least
+``(1 - WIN_SLACK)`` of it — a K-client cohort round does strictly less
+compute than the resident full-fleet round, so falling below that ceiling
+means the host sampling/gather/scatter pipeline ate the win.
 """
 from __future__ import annotations
 
@@ -83,7 +90,7 @@ def iter_axes(payload: dict) -> Iterator[Tuple[str, float]]:
                     yield f"rounds_per_sec/{n}/{key}", float(entry[key])
     for axis in ("sharded_rounds_per_sec_by_devices", "defense_rounds_per_sec",
                  "scenario_rounds_per_sec", "gated_rounds_per_sec",
-                 "model_family_rounds_per_sec"):
+                 "model_family_rounds_per_sec", "cohort_rounds_per_sec"):
         for outer, inner in payload.get(axis, {}).items():
             if not isinstance(inner, dict):
                 continue
@@ -153,6 +160,34 @@ def win_condition(fresh: dict, slack: float = WIN_SLACK):
     return violations, checked
 
 
+def cohort_win_condition(fresh: dict, slack: float = WIN_SLACK):
+    """Cohort win condition, intra-run like the packed one: wherever a
+    ``cohort_rounds_per_sec`` fleet entry carries a same-process
+    ``resident`` ceiling (``engine_bench.bench_cohort`` measures the
+    resident scan engine on that full fleet in the same run), every
+    cohort leaf K at that fleet size must be at least ``(1 - slack)`` of
+    it — a K-client round does strictly less compute than the resident
+    N-client round, so losing to it means the store/gather/scatter
+    pipeline ate the win.  Returns (violations, checked)."""
+    violations, checked = [], 0
+    for fleet, inner in fresh.get("cohort_rounds_per_sec", {}).items():
+        if not isinstance(inner, dict):
+            continue
+        ceiling = _rps(inner.get("resident"))
+        if ceiling is None:
+            continue
+        for leaf, entry in inner.items():
+            if leaf == "resident":
+                continue
+            val = _rps(entry)
+            if val is None:
+                continue
+            checked += 1
+            if val < (1.0 - slack) * ceiling:
+                violations.append((fleet, leaf, val, "resident", ceiling))
+    return violations, checked
+
+
 def main() -> int:
     argv = sys.argv[1:]
     tol = DEFAULT_TOLERANCE
@@ -182,6 +217,9 @@ def main() -> int:
     wins, win_checked = win_condition(fresh)
     print(f"perf gate: {win_checked} packed-vs-dense win pairs checked "
           f"(intra-run, {WIN_SLACK:.0%} slack)")
+    cohort_wins, cohort_checked = cohort_win_condition(fresh)
+    print(f"perf gate: {cohort_checked} cohort-vs-resident win pairs "
+          f"checked (intra-run, {WIN_SLACK:.0%} slack)")
     rc = 0
     if failures:
         print("REGRESSIONS (fresh < (1 - tol) * baseline):")
@@ -194,6 +232,13 @@ def main() -> int:
         for fleet, pn, p, dn, d in wins:
             print(f"  gated_rounds_per_sec/{fleet}: {pn} {p:.2f} < "
                   f"{dn} {d:.2f} rounds/sec")
+        rc = 1
+    if cohort_wins:
+        print("COHORT TAX (cohort round slower than the resident full-fleet "
+              "round):")
+        for fleet, kn, v, _, d in cohort_wins:
+            print(f"  cohort_rounds_per_sec/{fleet}: {kn} {v:.2f} < "
+                  f"resident {d:.2f} rounds/sec")
         rc = 1
     if rc == 0:
         print("perf gate: OK")

@@ -25,6 +25,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py [--clients 128]
 import argparse
 import os
 
+# scaled fleets past this size auto-enable the host-store cohort engine:
+# the resident engine would materialize O(N * n * 784) client data
+AUTO_COHORT_CLIENTS = 4096
+AUTO_COHORT_SIZE = 512
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -57,6 +62,14 @@ def main():
                          "SGD cohort at ceil(frac * N) and skip unselected "
                          "clients' compute (>= 0.5, the selection "
                          "fraction; numerics unchanged)")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="host-store cohort mode: keep the fleet in a "
+                         "numpy client store and run each round on a "
+                         "sampled cohort of K clients (device memory O(K), "
+                         "fleet size unbounded).  Auto-enabled at K=512 "
+                         f"for scaled fleets past {AUTO_COHORT_CLIENTS} "
+                         "clients; pass K >= clients to force the "
+                         "resident engine")
     ap.add_argument("--alpha", type=float, default=None,
                     help="Dirichlet concentration for the skew scenarios; "
                          "default 0.5")
@@ -80,6 +93,7 @@ def main():
 
     from repro import FedARServer, TaskRequirement, make_federated
     from repro.configs.fedar_mnist import MnistConfig, fleet_fed
+    from repro.data.datasets import VirtualFleet
     from repro.data.sources import eval_source
 
     name = args.dataset
@@ -93,28 +107,57 @@ def main():
         ap.error(f"--scenario/--alpha apply only to the pool datasets "
                  f"(digits/mnist/emnist), not to dataset={name!r}")
 
-    kw = {}
-    if name in ("digits", "mnist", "emnist"):
-        kw["scenario"] = args.scenario or "label_skew"
-        if kw["scenario"] == "iid":
-            if args.alpha is not None:
-                ap.error("--alpha applies to the skewed scenarios "
-                         "(label_skew/quantity_skew/robot_drift), not iid")
-        else:
-            kw["alpha"] = 0.5 if args.alpha is None else args.alpha
-    ds = make_federated(name, args.clients, samples_per_client=args.samples,
-                        cache_dir=args.cache_dir, **kw)
-    if ds.fallback:
-        print(f"[data] {name}: no IDX files in the cache dir — using the "
-              "deterministic offline synthetic fallback")
-    print(f"[data] dataset={ds.name} scenario={ds.scenario or '-'} "
-          f"shards={ds.x.shape} mean n_u={ds.sizes.mean():.0f}")
-    if args.devices > 1 and ds.num_clients % args.devices:
-        # non-divisible fleet: pad with inert dummy clients (all-False
-        # masks, exactly-zero aggregation weight) so the mesh shards evenly
-        ds = ds.padded_to(args.devices)
-        print(f"[data] fleet padded {args.clients} -> {ds.num_clients} "
-              f"clients to divide by {args.devices} shards")
+    cohort = args.cohort
+    if (cohort is None and name == "scaled"
+            and args.clients > AUTO_COHORT_CLIENTS):
+        cohort = AUTO_COHORT_SIZE
+        print(f"[store] {args.clients} clients exceed "
+              f"{AUTO_COHORT_CLIENTS}: auto-enabling the host-store "
+              f"cohort engine (K={cohort}; --cohort overrides)")
+    cohort_mode = cohort is not None and cohort < args.clients
+    if cohort_mode:
+        if args.select_frac is not None:
+            ap.error("--select_frac composes with the resident engine "
+                     "only; in cohort mode the cohort IS the statically-"
+                     "capped set — lower --cohort instead")
+        if args.packed is not None:
+            ap.error("--packed/--no-packed pick a resident layout; the "
+                     "cohort engine always runs the K-client masked "
+                     "dense layout")
+
+    if cohort_mode and name == "scaled":
+        # lazy fleet: N is a property of the store, never an (N, n, 784)
+        # array — this is what lets --clients 1000000 run on a laptop
+        ds = VirtualFleet(args.clients, samples_per_client=args.samples)
+        print(f"[data] dataset=virtual (lazy scaled fleet) "
+              f"clients={ds.num_clients} n_u={ds.samples}")
+    else:
+        kw = {}
+        if name in ("digits", "mnist", "emnist"):
+            kw["scenario"] = args.scenario or "label_skew"
+            if kw["scenario"] == "iid":
+                if args.alpha is not None:
+                    ap.error("--alpha applies to the skewed scenarios "
+                             "(label_skew/quantity_skew/robot_drift), "
+                             "not iid")
+            else:
+                kw["alpha"] = 0.5 if args.alpha is None else args.alpha
+        ds = make_federated(name, args.clients,
+                            samples_per_client=args.samples,
+                            cache_dir=args.cache_dir, **kw)
+        if ds.fallback:
+            print(f"[data] {name}: no IDX files in the cache dir — using "
+                  "the deterministic offline synthetic fallback")
+        print(f"[data] dataset={ds.name} scenario={ds.scenario or '-'} "
+              f"shards={ds.x.shape} mean n_u={ds.sizes.mean():.0f}")
+        if (not cohort_mode and args.devices > 1
+                and ds.num_clients % args.devices):
+            # non-divisible fleet: pad with inert dummy clients (all-False
+            # masks, exactly-zero aggregation weight) so the mesh shards
+            # evenly
+            ds = ds.padded_to(args.devices)
+            print(f"[data] fleet padded {args.clients} -> {ds.num_clients} "
+                  f"clients to divide by {args.devices} shards")
 
     # the paper's B=20, E=5 setting, at any fleet size.  The paper's 12
     # heterogeneous robots take the dense FoolsGold statistic; the tiled
@@ -122,29 +165,42 @@ def main():
     # dense max-cosine misfires — engine scale defaults to the
     # cluster-aware sketched defense (O(N*r) payload, honest clusters
     # pardoned by multiplicity; see core/defense.py)
+    if cohort_mode and args.devices > 1 and cohort % args.devices:
+        ap.error(f"--cohort {cohort} must divide by --devices "
+                 f"{args.devices} (the cohort is what shards)")
     fed = fleet_fed(ds.num_clients, local_epochs=5, local_batch_size=20,
                     timeout=10.0,
-                    defense="foolsgold" if args.clients == 12
+                    defense="foolsgold_sketch" if cohort_mode
+                    else "foolsgold" if args.clients == 12
                     else "foolsgold_sketch",
                     select_frac=args.select_frac,
+                    cohort_size=cohort,
                     mesh_shape=args.devices if args.devices > 1 else None)
     server = FedARServer(MnistConfig(), fed, TaskRequirement())
     if server.mesh is not None:
+        k = cohort if server.cohort_mode else ds.num_clients
         print(f"mesh: {server.mesh.devices.size} client shards "
-              f"x {ds.num_clients // server.mesh.devices.size} clients")
+              f"x {k // server.mesh.devices.size} clients")
 
-    # dense vs bucketed-packed is the engine's call (pick_layout on the
-    # fleet's padding-waste estimate) unless --packed / --no-packed forces
-    # it; either layout is bit-identical round numerics
-    layout = ("auto" if args.packed is None
-              else "packed" if args.packed else "dense")
-    data = server.engine.prepare_data(ds, layout=layout)
-    if "packed" in data:
-        widths = [xb.shape[1] for xb in data["packed"]["x"]]
-        print(f"[data] layout=packed: {len(widths)} buckets, "
-              f"widths {widths}")
+    if server.cohort_mode:
+        print(f"[store] host client store: {ds.num_clients} clients, "
+              f"cohort K={cohort} on device per round")
+        data = ds  # the fleet object; each round materializes K shards
     else:
-        print(f"[data] layout=dense: pad-to-max {data['x'].shape[1]}")
+        # dense vs bucketed-packed is the engine's call (pick_layout on the
+        # fleet's padding-waste estimate) unless --packed / --no-packed
+        # forces it; either layout is bit-identical round numerics
+        layout = ("auto" if args.packed is None
+                  else "packed" if args.packed else "dense")
+        if hasattr(ds, "materialize"):
+            ds = ds.materialize()  # K >= N: back to the resident engine
+        data = server.engine.prepare_data(ds, layout=layout)
+        if "packed" in data:
+            widths = [xb.shape[1] for xb in data["packed"]["x"]]
+            print(f"[data] layout=packed: {len(widths)} buckets, "
+                  f"widths {widths}")
+        else:
+            print(f"[data] layout=dense: pad-to-max {data['x'].shape[1]}")
     # evaluate on the held-out split of the same source (test IDX files when
     # cached, the synthetic generator otherwise)
     eval_name = name if name in ("mnist", "emnist") else "synthetic"
@@ -161,8 +217,14 @@ def main():
     for i, (a, lo) in enumerate(zip(hist["acc"], hist["loss"])):
         late = int((~hist["on_time"][i] & hist["selected"][i]).sum())
         print(f"{i:5d}  {a:8.3f}  {lo:6.3f}  {late}")
-    print("\nfinal trust scores per robot:")
-    print(np.round(hist["trust"][-1], 1))
+    if server.cohort_mode:
+        score = np.asarray(server.trust.score)
+        head = min(24, len(score))
+        print(f"\nfinal trust scores (store head, {head} of {len(score)}):")
+        print(np.round(score[:head], 1))
+    else:
+        print("\nfinal trust scores per robot:")
+        print(np.round(hist["trust"][-1], 1))
     print("\n(resource-starved robots are never selected, trust ~50;")
     print(" reliable robots accumulate C_Reward; stragglers get penalties)")
 

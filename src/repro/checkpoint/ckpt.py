@@ -62,3 +62,34 @@ def restore(path: str, template: Any, *, shardings: Optional[Any] = None):
         else:
             out.append(jnp.asarray(arr))
     return jax.tree.unflatten(treedef, out), payload["step"]
+
+
+# ------------------------------------------------------------- host store
+def save_store(path: str, store, *, params=None, step: int = 0) -> None:
+    """Checkpoint a host-side ``ClientStore`` (``core/client_store.py``)
+    mid-run, optionally bundling the (D,) global model so one file resumes
+    the whole cohort engine."""
+    tree = {"store": store.state_dict()}
+    if params is not None:
+        tree["params"] = params
+    save(path, tree, step=step)
+
+
+def restore_store(path: str, store, *, with_params: bool = False):
+    """Restore a ``save_store`` checkpoint INTO ``store`` (in place,
+    shape-checked against its columns).  Returns ``(params, step)`` —
+    ``params`` is the bundled flat model when ``with_params`` (the file
+    must have been written with one), else ``None``."""
+    template = {"store": store.state_dict()}
+    if with_params:
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+        rec = payload["records"].get("params")
+        if rec is None:
+            raise ValueError(f"{path} holds no bundled params")
+        template["params"] = np.zeros(rec["shape"], np.float32)
+    tree, step = restore(path, template)
+    store.load_state_dict(
+        jax.tree.map(lambda a: np.asarray(a), tree["store"])
+    )
+    return tree.get("params"), step

@@ -209,6 +209,22 @@ class FedConfig:
     # client selection: "trust" (FedAR, Alg 2 line 8) | "random" (the
     # random-selection baseline the paper argues against)
     selection: str = "trust"
+    # --- host-store cohort mode (core/client_store.py + core/engine.py) ---
+    # cohort_size: sample K clients per round from the host-side client
+    # store instead of keeping the whole fleet resident on device.  Trust,
+    # battery and (sketched) defense history live in a numpy-backed table;
+    # each round FedAR's trust-aware selection draws a static-shape cohort,
+    # gathers only those K clients' shards/state to device, runs the
+    # unchanged round body, and scatters the updates back — per-step device
+    # memory is O(K*D + K*n), independent of num_clients.  K >= num_clients
+    # reduces to the resident engine exactly.  None (default) keeps the
+    # resident whole-fleet path.
+    cohort_size: Optional[int] = None
+    # two-level tree aggregation (core/distributed.py reduce_tree): the
+    # cross-shard (D,) reduction runs as reduce-scatter + all-gather
+    # instead of one flat psum.  Off by default so the resident mesh path
+    # keeps its pinned reduction order; the cohort sub-engine enables it.
+    tree_reduce: bool = False
     staleness_alpha: float = 0.6  # FedAsync mixing weight
     staleness_decay: str = "poly"  # poly | const
     # --- robust-defense subsystem (core/defense.py) ---

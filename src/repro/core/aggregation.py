@@ -142,7 +142,11 @@ def fedavg_aggregate(
             1.0 if stale_loc is None else staleness_weight(stale_loc)
         )
         num = jnp.einsum("n,nd->d", w_loc * decay_loc, deltas)
-    return global_flat + comms.psum(num) / denom
+    # cross-shard reduce of the (D,) per-shard partial: a flat psum by
+    # default; the two-level tree (reduce-scatter + all-gather) when the
+    # comms enable it (FedConfig.tree_reduce — the cohort engine's
+    # hierarchical aggregation)
+    return global_flat + comms.reduce_tree(num) / denom
 
 
 def async_aggregate(

@@ -1,0 +1,183 @@
+"""Host-side client store: the fleet registry the cohort engine samples.
+
+The resident engine keeps every client's trust, battery and defense history
+as device state, which caps the fleet at what one scan carry fits.  The
+store inverts that: ALL O(N * smallstate) bookkeeping lives in a sharded
+numpy table on the host — trust score + the Algorithm 1 participation /
+failure counters, the resource model (memory / bandwidth / battery /
+compute), the (sketched) defense history rows, and activity bookkeeping
+(``last_selected``) — and each round the engine
+
+  1. samples a static-shape cohort K via ``selection.sample_cohort``
+     (trust + CheckResource over the store's columns),
+  2. ``gather``\\ s only those K clients' rows to device,
+  3. runs the unchanged round body at cohort scope, and
+  4. ``scatter_round``\\ s the updated trust / battery / history rows back
+     and ``finish_round``\\ s the host-side evolution of everyone else
+     (C_Interested for the eligible-but-not-sampled, the idle battery
+     trickle — exactly the resident engine's update semantics, applied in
+     numpy).
+
+The table is split into ``num_shards`` contiguous blocks (``block``):
+every column view is O(N / num_shards), so a multi-host serving layer can
+own disjoint shards.  ``state_dict`` / ``load_state_dict`` round-trip the
+whole table through ``checkpoint/ckpt.py`` (``save_store`` /
+``restore_store``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.common.config import FedConfig
+from repro.core.resources import BATTERY_COST, make_fleet
+from repro.core.trust import TrustState
+
+
+class HostResources(NamedTuple):
+    """Numpy view of the store's resource columns — duck-types
+    ``ResourceState`` for the host-side selection math."""
+
+    memory: np.ndarray
+    bandwidth: np.ndarray
+    battery: np.ndarray
+    compute: np.ndarray
+
+
+# the array-valued columns a checkpoint must round-trip, in one place so
+# state_dict / load_state_dict / block can never drift apart
+_COLUMNS = (
+    "score", "participations", "failures",
+    "memory", "bandwidth", "battery", "compute",
+    "history", "last_selected",
+)
+
+
+class ClientStore:
+    """Numpy-backed per-client table; O(N * smallstate) host memory."""
+
+    def __init__(self, fed: FedConfig, history_dim: int, *,
+                 num_shards: int = 1):
+        n = fed.num_clients
+        if num_shards < 1 or n % num_shards:
+            raise ValueError(
+                f"num_clients={n} must divide into num_shards={num_shards} "
+                f"contiguous store blocks"
+            )
+        self.fed = fed
+        self.num_shards = num_shards
+        res, self.poison_mask = make_fleet(
+            n,
+            num_starved=fed.num_starved,
+            num_poisoners=fed.num_poisoners,
+            seed=fed.seed,
+        )
+        self.score = np.full(n, fed.c_initial, np.float32)
+        self.participations = np.zeros(n, np.int32)
+        self.failures = np.zeros(n, np.int32)
+        # np.array (copy): make_fleet returns device arrays whose np views
+        # are read-only, and these columns mutate every round
+        self.memory = np.array(res.memory)
+        self.bandwidth = np.array(res.bandwidth)
+        self.battery = np.array(res.battery)
+        self.compute = np.array(res.compute)
+        self.history = np.zeros((n, history_dim), np.float32)
+        self.last_selected = np.full(n, -1, np.int32)
+        # 0-d array (not a python int) so the ckpt pytree flattens it
+        self.round_idx = np.zeros((), np.int32)
+
+    # ------------------------------------------------------------------
+    @property
+    def num_clients(self) -> int:
+        return self.score.shape[0]
+
+    @property
+    def history_dim(self) -> int:
+        return self.history.shape[1]
+
+    def block(self, shard: int) -> dict:
+        """Shard ``shard``'s contiguous column views (zero-copy): clients
+        ``[shard * N/k, (shard + 1) * N/k)`` — the O(N/k) slice a
+        multi-host registry would own."""
+        if not 0 <= shard < self.num_shards:
+            raise IndexError(
+                f"shard {shard} out of range for {self.num_shards} blocks"
+            )
+        blk = self.num_clients // self.num_shards
+        sl = slice(shard * blk, (shard + 1) * blk)
+        return {name: getattr(self, name)[sl] for name in _COLUMNS}
+
+    def trust_view(self) -> TrustState:
+        return TrustState(self.score, self.participations, self.failures)
+
+    def resources_view(self) -> HostResources:
+        return HostResources(
+            self.memory, self.bandwidth, self.battery, self.compute
+        )
+
+    # ------------------------------------------------------------------
+    def gather(self, idx) -> dict:
+        """Copy the cohort's rows out of the table: the O(K * smallstate)
+        payload that moves to device each round."""
+        idx = np.asarray(idx)
+        return {
+            "score": self.score[idx],
+            "participations": self.participations[idx],
+            "failures": self.failures[idx],
+            "memory": self.memory[idx],
+            "bandwidth": self.bandwidth[idx],
+            "battery": self.battery[idx],
+            "compute": self.compute[idx],
+            "history": self.history[idx],
+        }
+
+    def scatter_round(self, idx, valid, *, trust: TrustState, battery,
+                      history) -> None:
+        """Write the round's device results back into the table — only the
+        ``valid`` cohort slots land (underfill slots carry garbage rows
+        gathered from client 0 and must never scatter)."""
+        idx = np.asarray(idx)[np.asarray(valid, bool)]
+        keep = np.asarray(valid, bool)
+        self.score[idx] = np.asarray(trust.score)[keep]
+        self.participations[idx] = np.asarray(trust.participations)[keep]
+        self.failures[idx] = np.asarray(trust.failures)[keep]
+        self.battery[idx] = np.asarray(battery)[keep]
+        if self.history_dim:
+            self.history[idx] = np.asarray(history)[keep]
+
+    def finish_round(self, idx, valid, eligible) -> None:
+        """Host-side evolution of the NON-cohort population, mirroring the
+        resident round body: eligible-but-not-sampled clients earn
+        ``c_interested`` (Algorithm 1's interest credit), every non-
+        participant trickle-charges battery at ``BATTERY_COST / 4``, and
+        the cohort's activity stamp + the round counter advance."""
+        in_cohort = np.zeros(self.num_clients, bool)
+        live = np.asarray(idx)[np.asarray(valid, bool)]
+        in_cohort[live] = True
+        interested = np.asarray(eligible, bool) & ~in_cohort
+        self.score[interested] += np.float32(self.fed.c_interested)
+        idle = ~in_cohort
+        self.battery[idle] = np.minimum(
+            self.battery[idle] + BATTERY_COST / 4, 1.0
+        )
+        self.last_selected[live] = int(self.round_idx)
+        self.round_idx = self.round_idx + np.int32(1)
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Checkpoint pytree: every mutable column + the round counter."""
+        out = {name: getattr(self, name) for name in _COLUMNS}
+        out["round_idx"] = self.round_idx
+        return out
+
+    def load_state_dict(self, state: dict) -> None:
+        for name in _COLUMNS:
+            arr = np.asarray(state[name])
+            if arr.shape != getattr(self, name).shape:
+                raise ValueError(
+                    f"store column {name!r}: checkpoint shape {arr.shape} "
+                    f"vs store {getattr(self, name).shape}"
+                )
+            setattr(self, name, arr.astype(getattr(self, name).dtype))
+        self.round_idx = np.asarray(state["round_idx"], np.int32).reshape(())

@@ -51,9 +51,17 @@ class DefenseStrategy:
     ``weights``        -- replicated (N,) aggregation weights in [0, 1],
                           or ``None`` when the strategy does not re-weight
                           (lets the engine skip the multiply entirely).
+    ``cohort_compatible`` -- whether the per-client history block is small
+                          enough to live in the numpy host store
+                          (O(history_dim) per client) so the cohort engine
+                          (``FedConfig.cohort_size``) can gather/scatter K
+                          rows per round.  Dense FoolsGold is the one
+                          strategy that is not: its (N, D) model-dim
+                          history would make the host table O(N*D).
     """
 
     name = "none"
+    cohort_compatible = True
 
     def history_dim(self, model_dim: int) -> int:
         return 0
@@ -74,6 +82,7 @@ class FoolsGoldDefense(DefenseStrategy):
     """Dense Fung et al. re-weighting over the (N, D) update history."""
 
     name = "foolsgold"
+    cohort_compatible = False  # O(N*D) host table would defeat the store
 
     def __init__(self, fed: FedConfig, model_dim: int):
         self.decay = fed.defense_history_decay

@@ -43,6 +43,7 @@ import warnings
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
@@ -94,13 +95,29 @@ class ClientComms:
         self.defense_gather_shapes.append(tuple(out.shape))
         return out
 
+    def reduce_tree(self, x):
+        """Two-level cross-shard reduction of a (D,) partial: each shard
+        already holds its leaf-psum'd block partial, and the cross-shard
+        phase reduce-scatters a 1/k slice onto every device before
+        all-gathering the reduced slices back (vs one flat ``psum`` that
+        materializes the whole (D,) operand per device).  Identity on one
+        device; ``MeshComms`` implements the tree when enabled."""
+        return self.psum(x)
+
 
 class MeshComms(ClientComms):
-    """``jax.lax`` collectives over the ``clients`` mesh axis."""
+    """``jax.lax`` collectives over the ``clients`` mesh axis.
 
-    def __init__(self, axis: str, shards: int):
+    ``tree=True`` (``FedConfig.tree_reduce``) routes ``reduce_tree``
+    through the two-phase reduce-scatter + all-gather formulation —
+    the hierarchical aggregation path the cohort engine enables; the
+    default flat ``psum`` keeps the resident mesh's pinned reduction
+    order."""
+
+    def __init__(self, axis: str, shards: int, *, tree: bool = False):
         super().__init__()
         self.axis, self.shards = axis, shards
+        self.tree = tree
 
     def psum(self, x):
         return jax.lax.psum(x, self.axis)
@@ -112,6 +129,25 @@ class MeshComms(ClientComms):
         n_local = x.shape[0] // self.shards
         start = jax.lax.axis_index(self.axis) * n_local
         return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=0)
+
+    def reduce_tree(self, x):
+        """Cross-shard reduce of a (D,) per-shard partial.  Tree mode pads
+        D to a shard multiple, reduce-scatters so each device sums only its
+        D/k slice (grouped ``psum`` with ``axis_index_groups`` is
+        unimplemented on CPU shard_map, so the scatter phase IS the leaf
+        level of the tree), then all-gathers the reduced slices — each
+        device touches O(D/k) during the reduction instead of the full
+        (D,) operand a flat psum materializes."""
+        if not self.tree or self.shards == 1 or x.ndim != 1:
+            return self.psum(x)
+        d = x.shape[0]
+        pad = (-d) % self.shards
+        padded = jnp.pad(x, (0, pad)) if pad else x
+        leaf = jax.lax.psum_scatter(
+            padded, self.axis, scatter_dimension=0, tiled=True
+        )
+        full = jax.lax.all_gather(leaf, self.axis, axis=0, tiled=True)
+        return full[:d]
 
 
 def client_mesh(fed: FedConfig) -> Optional[Mesh]:

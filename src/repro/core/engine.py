@@ -66,6 +66,7 @@ masked epochs x batches loop in one ``pallas_call``.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import NamedTuple, Union
 
@@ -94,7 +95,8 @@ from repro.core.resources import (
     make_fleet,
     round_latency,
 )
-from repro.core.selection import select_clients
+from repro.core.client_store import ClientStore
+from repro.core.selection import sample_cohort, select_clients
 from repro.core.trust import TrustState, init_trust, update_trust
 from repro.kernels.ops import resolve_impl
 from repro.models.client import ClientModel
@@ -202,7 +204,8 @@ class FedAREngine:
         )
         self.mesh = client_mesh(fed)
         self.comms: ClientComms = (
-            MeshComms(fed.client_axis, self.mesh.devices.size)
+            MeshComms(fed.client_axis, self.mesh.devices.size,
+                      tree=fed.tree_reduce)
             if self.mesh is not None
             else ClientComms()
         )
@@ -292,6 +295,10 @@ class FedAREngine:
                 specs["mask"] = Pc
             if "round_mask" in data:
                 specs["round_mask"] = window_client_spec(self.fed)
+            if "cohort_valid" in data:
+                # host-side preselection mask: (K,) bookkeeping, replicated
+                # like the selection mask it replaces
+                specs["cohort_valid"] = Pr
         return specs
 
     def _round_out_specs(self) -> RoundOutputs:
@@ -602,10 +609,17 @@ class FedAREngine:
         k_sel, k_lat, _k_poi = jax.random.split(key, 3)
 
         # --- Algorithm 2 lines 6-10: CheckResource + trust sort + sample
-        # (global (N,) math, replicated across shards)
-        selected, ok = select_clients(
-            k_sel, state.trust, state.resources, self.req, fed
-        )
+        # (global (N,) math, replicated across shards).  In cohort mode
+        # (FedConfig.cohort_size) selection already ran HOST-side over the
+        # client store (selection.sample_cohort) and every gathered row IS
+        # a participant — ``cohort_valid`` marks the genuinely selected
+        # slots (underfill slots are inert: all-False mask, zero weight).
+        if "cohort_valid" in data:
+            selected = ok = data["cohort_valid"]
+        else:
+            selected, ok = select_clients(
+                k_sel, state.trust, state.resources, self.req, fed
+            )
 
         g_flat = state.params
         locals_c = cohort = None  # compact gated-cohort view, when gating
@@ -948,3 +962,174 @@ class FedAREngine:
               for f in RoundOutputs._fields)
         )
         return state, stacked
+
+
+class CohortEngine:
+    """Host-store cohort driver: fleets bigger than one scan carry.
+
+    The resident ``FedAREngine`` keeps all N clients' trust / battery /
+    defense history / data resident on device, so N is an engine limit.
+    This driver makes N a dataset property instead: the full fleet lives in
+    a numpy ``ClientStore`` on the host, and each round
+
+      1. ``selection.sample_cohort`` draws a static-shape cohort of
+         K = ``FedConfig.cohort_size`` clients from the store (trust +
+         CheckResource over the host columns, keyed ``(seed, round)``),
+      2. the fleet object materializes ONLY those K clients' samples
+         (``cohort_arrays``) and the store ``gather``\\ s their state rows,
+      3. a sub-``FedAREngine`` built at ``num_clients=K`` runs the
+         unchanged jitted round body (one compile for the whole run —
+         cohort shapes are static and the input key set never changes),
+      4. trust / battery / history rows ``scatter_round`` back and
+         ``finish_round`` evolves the non-cohort population host-side.
+
+    Per-round device memory is O(K*D + K*samples), independent of N; the
+    host pays O(N * smallstate).  Inside the cohort the sub-engine selects
+    participants exactly as the resident engine would have among those K
+    (the ``cohort_valid`` mask pre-gates eligibility), and on a mesh the
+    sub-engine aggregates with the two-level tree reduce
+    (``MeshComms.reduce_tree``) so cross-shard traffic is O(D/k) per
+    device.
+
+    K >= N is NOT this class's job: ``FedARServer`` strips ``cohort_size``
+    and runs the resident engine, which is bit-identical to the
+    pre-cohort code path.
+    """
+
+    def __init__(
+        self,
+        model: Union[ClientModel, MnistConfig],
+        fed: FedConfig,
+        req: TaskRequirement,
+        *,
+        lr: float = 0.1,
+    ):
+        if fed.cohort_size is None:
+            raise ValueError("CohortEngine needs FedConfig.cohort_size set")
+        if fed.cohort_size >= fed.num_clients:
+            raise ValueError(
+                f"cohort_size={fed.cohort_size} >= num_clients="
+                f"{fed.num_clients}: the whole fleet fits on device — use "
+                f"the resident engine (FedARServer does this automatically)"
+            )
+        if fed.aggregation in ("async", "async_seq"):
+            raise ValueError(
+                f"aggregation={fed.aggregation!r} carries a per-client "
+                f"delta buffer across rounds, which a resampled cohort "
+                f"cannot: the buffered update would belong to a client no "
+                f"longer on device; use fedar/fedavg with cohort_size"
+            )
+        if fed.select_frac is not None:
+            raise ValueError(
+                "select_frac gating composes with the resident engine "
+                "only; the cohort IS the statically-capped set — drop "
+                "select_frac and lower cohort_size instead"
+            )
+        self.fed, self.req, self.lr = fed, req, lr
+        # the device-side engine is the UNCHANGED round body at fleet size
+        # K: same selection, SGD, defense, trust and battery updates, with
+        # the two-level tree reduce on a mesh.  Synthetic fleet knobs
+        # (starved / poisoner counts) are host-store properties, not
+        # sub-engine ones — the cohort's real resource rows and data
+        # override the sub-engine's make_fleet output every round.
+        sub = dataclasses.replace(
+            fed,
+            num_clients=fed.cohort_size,
+            cohort_size=None,
+            num_starved=0,
+            num_poisoners=0,
+            tree_reduce=True,
+        )
+        self.engine = FedAREngine(model, sub, req, lr=lr)
+        if not self.engine.defense.cohort_compatible:
+            raise ValueError(
+                f"defense {self.engine.defense.name!r} is not cohort-"
+                f"compatible: its per-client history is O(model_dim), so "
+                f"the host store would be O(N*D); use 'foolsgold_sketch' "
+                f"(O(N*r)) or 'none'"
+            )
+        self.model = self.engine.model
+        self.template = self.engine.template
+        self.dim = self.engine.dim
+        self.mesh = self.engine.mesh
+        self.store = ClientStore(
+            fed, self.engine.defense.history_dim(self.dim)
+        )
+        self.poison_mask = self.store.poison_mask
+        self.params = flatten(self.template)
+        self._state0 = self.engine.init_state()
+
+    # ------------------------------------------------------------------
+    @property
+    def round_idx(self) -> int:
+        return int(self.store.round_idx)
+
+    def _build_round_inputs(self, fleet):
+        """Sample the round's cohort and assemble the device inputs: the
+        jit-boundary pytree is shaped by K alone (the memory-independence
+        contract — N never appears in a device shape)."""
+        r = int(self.store.round_idx)
+        idx, valid, elig = sample_cohort(
+            self.store.score,
+            self.store.resources_view(),
+            self.req,
+            self.fed,
+            cohort_size=self.fed.cohort_size,
+            round_idx=r,
+        )
+        data = jax.tree.map(jnp.asarray, fleet.cohort_arrays(idx, valid))
+        rows = self.store.gather(idx)
+        state = self._state0._replace(
+            params=jnp.asarray(self.params),
+            trust=TrustState(
+                jnp.asarray(rows["score"]),
+                jnp.asarray(rows["participations"]),
+                jnp.asarray(rows["failures"]),
+            ),
+            resources=ResourceState(
+                jnp.asarray(rows["memory"]),
+                jnp.asarray(rows["bandwidth"]),
+                jnp.asarray(rows["battery"]),
+                jnp.asarray(rows["compute"]),
+            ),
+            fg_history=jnp.asarray(rows["history"]),
+            round_idx=jnp.asarray(r, jnp.int32),
+        )
+        return state, data, idx, valid, elig
+
+    def run_round(self, fleet, *, eval_set=None):
+        """One store-sampled round -> (idx, valid, RoundOutputs).
+
+        ``idx``/``valid`` name the (K,) cohort; the outputs' client axis is
+        cohort-indexed (row j belongs to fleet client ``idx[j]`` where
+        ``valid[j]``)."""
+        state, data, idx, valid, elig = self._build_round_inputs(fleet)
+        state2, out = self.engine.step(state, data, eval_set=eval_set)
+        self.params = state2.params
+        self.store.scatter_round(
+            idx,
+            valid,
+            trust=TrustState(
+                np.asarray(state2.trust.score),
+                np.asarray(state2.trust.participations),
+                np.asarray(state2.trust.failures),
+            ),
+            battery=np.asarray(state2.resources.battery),
+            history=np.asarray(state2.fg_history),
+        )
+        self.store.finish_round(idx, valid, elig)
+        return idx, valid, out
+
+    def run(self, fleet, *, rounds: int, eval_set=None):
+        """R store-sampled rounds; returns a list of per-round
+        ``(idx, valid, RoundOutputs-as-numpy)`` tuples."""
+        if fleet.num_clients != self.fed.num_clients:
+            raise ValueError(
+                f"fleet has {fleet.num_clients} clients but FedConfig."
+                f"num_clients={self.fed.num_clients}"
+            )
+        outs = []
+        for _ in range(rounds):
+            idx, valid, out = self.run_round(fleet, eval_set=eval_set)
+            outs.append((idx, valid, jax.tree.map(np.asarray, out)))
+        return outs

@@ -17,6 +17,7 @@ to the single-device path.  ``FedARServer.mesh`` exposes the active mesh
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, List
 
@@ -24,7 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FedConfig
-from repro.core.engine import FedAREngine, RoundOutputs, flatten, unflatten
+from repro.core.engine import (
+    CohortEngine,
+    FedAREngine,
+    RoundOutputs,
+    flatten,
+    unflatten,
+)
 from repro.core.resources import TaskRequirement
 
 __all__ = ["FedARServer", "flatten", "unflatten"]
@@ -44,11 +51,25 @@ class FedARServer:
     lr: float = 0.1
 
     def __post_init__(self):
-        self.engine = FedAREngine(self.cfg, self.fed, self.req, lr=self.lr)
+        # cohort_size >= N: the "cohort" is the whole fleet — strip the knob
+        # and run the resident engine, bit-identical to the pre-cohort path
+        if (
+            self.fed.cohort_size is not None
+            and self.fed.cohort_size >= self.fed.num_clients
+        ):
+            self.fed = dataclasses.replace(self.fed, cohort_size=None)
+        self.cohort_mode = self.fed.cohort_size is not None
+        if self.cohort_mode:
+            self.engine = CohortEngine(self.cfg, self.fed, self.req,
+                                       lr=self.lr)
+            self.state = None  # server state lives in engine.store/params
+        else:
+            self.engine = FedAREngine(self.cfg, self.fed, self.req,
+                                      lr=self.lr)
+            self.state = self.engine.init_state()
         self.template = self.engine.template
         self.dim = self.engine.dim
         self.poison_mask = self.engine.poison_mask
-        self.state = self.engine.init_state()
         self.history: Dict[str, List[Any]] = {
             "trust": [],
             "selected": [],
@@ -57,6 +78,11 @@ class FedARServer:
             "acc": [],
             "round_time": [],
         }
+        if self.cohort_mode:
+            # per-round (K,) client indices + slot-validity of the sampled
+            # cohort; the trust/selected/on_time rows above are cohort-
+            # indexed in this mode (row j -> fleet client cohort[r][0][j])
+            self.history["cohort"] = []
 
     # -- live views of the engine carry (the seed exposed these directly) --
     @property
@@ -66,22 +92,31 @@ class FedARServer:
 
     @property
     def params(self):
-        return unflatten(self.state.params, self.template)
+        flat = self.engine.params if self.cohort_mode else self.state.params
+        return unflatten(flat, self.template)
 
     @property
     def trust(self):
+        if self.cohort_mode:
+            return self.engine.store.trust_view()
         return self.state.trust
 
     @property
     def resources(self):
+        if self.cohort_mode:
+            return self.engine.store.resources_view()
         return self.state.resources
 
     @property
     def fg_history(self):
+        if self.cohort_mode:
+            return self.engine.store.history
         return self.state.fg_history
 
     @property
     def round_idx(self) -> int:
+        if self.cohort_mode:
+            return self.engine.round_idx
         return int(self.state.round_idx)
 
     # ------------------------------------------------------------------
@@ -103,11 +138,35 @@ class FedARServer:
                 self.history["loss"].append(float(loss[r]))
                 self.history["acc"].append(float(acc[r]))
 
+    def _resident_data(self, data):
+        """Resident engines consume the prepared array dict; a fleet object
+        (``FederatedDataset`` / ``VirtualFleet``) passed instead is
+        materialized + prepared here, so call sites can hand the same fleet
+        to a cohort server and a resident one."""
+        if hasattr(data, "cohort_arrays"):
+            ds = data.materialize() if hasattr(data, "materialize") else data
+            return self.engine.prepare_data(ds)
+        return data
+
     # ------------------------------------------------------------------
     def run_round(self, data, *, eval_set=None, force_straggler=None):
         """One communication round (one jitted dispatch + host sync).
         ``data``: dict with stacked per-client arrays x (N, n, 784), y (N, n),
-        sizes (N,), activations (N,) int32 (0=relu, 1=softmax, Table II)."""
+        sizes (N,), activations (N,) int32 (0=relu, 1=softmax, Table II) —
+        or, in cohort mode, a fleet object exposing ``cohort_arrays``."""
+        if self.cohort_mode:
+            if force_straggler is not None:
+                raise ValueError(
+                    "force_straggler is a resident-engine test hook; the "
+                    "cohort engine has no stable client axis to force"
+                )
+            idx, valid, out = self.engine.run_round(data, eval_set=eval_set)
+            self._append(out, 1, eval_set is not None)
+            self.history["cohort"].append(
+                (np.asarray(idx), np.asarray(valid))
+            )
+            return np.asarray(out.selected), np.asarray(out.on_time)
+        data = self._resident_data(data)
         force = None if force_straggler is None else jnp.asarray(force_straggler)
         self.state, out = self.engine.step(
             self.state, data, eval_set=eval_set, force_straggler=force
@@ -121,7 +180,19 @@ class FedARServer:
 
         driver="scan"   -- all rounds inside one ``lax.scan`` (no per-round
                            host sync; the default).
-        driver="python" -- per-round jitted dispatch via ``run_round``."""
+        driver="python" -- per-round jitted dispatch via ``run_round``.
+
+        Cohort mode (``FedConfig.cohort_size`` < N) always drives rounds
+        from the host — each round must sample a fresh cohort from the
+        store — so both drivers collapse to the per-round loop there, and
+        ``data`` must be a fleet object exposing ``cohort_arrays``."""
+        if self.cohort_mode:
+            for _ in range(rounds):
+                self.run_round(
+                    data, eval_set=eval_set, force_straggler=force_straggler
+                )
+            return self.history
+        data = self._resident_data(data)
         if driver == "python":
             for _ in range(rounds):
                 self.run_round(

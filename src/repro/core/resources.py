@@ -34,6 +34,10 @@ class TaskRequirement(NamedTuple):
 
 STARVED_FRAC = 1.0 / 6.0  # paper §IV.A: 2 of 12 robots are resource-starved
 POISON_FRAC = 1.0 / 6.0  # ... and 2 of 12 are unreliable/poisoning
+# battery cost of one training round; idle clients recharge at 1/4 of it.
+# Shared with the host client store's trickle (core/client_store.py) so
+# cohort-mode battery trajectories stay consistent with the resident engine.
+BATTERY_COST = 0.02
 
 
 def make_fleet(
@@ -120,7 +124,7 @@ def round_latency(
 
 
 def drain_battery(
-    res: ResourceState, participated: jnp.ndarray, *, cost: float = 0.02
+    res: ResourceState, participated: jnp.ndarray, *, cost: float = BATTERY_COST
 ) -> ResourceState:
     """Battery cost of one training round; idle clients trickle-charge."""
     batt = jnp.where(

@@ -48,6 +48,30 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def inert_clients(count: int, samples: int, dim: int, *, windows: int = 0,
+                  x_dtype=np.float32, y_dtype=np.int32) -> dict:
+    """The ONE inert-dummy-client constructor: ``count`` clients that can
+    never contribute to a round.  Contract (unit-tested in
+    ``tests/test_client_store.py``): all-False sample ``mask`` — the
+    masked local-SGD delta is exactly zero — and ``sizes == 0`` —
+    aggregation weight exactly zero — so an inert client is a numerical
+    no-op under every aggregation mode and defense.  Shared by
+    ``FederatedDataset.padded_to`` (mesh padding), ``packed_arrays``
+    (bucket fill rows) and the cohort underfill (fewer than K eligible
+    clients); ``round_mask`` (all-False drift schedule) rides along when
+    ``windows > 0``."""
+    out = {
+        "x": np.zeros((count, samples, dim), x_dtype),
+        "y": np.zeros((count, samples), y_dtype),
+        "sizes": np.zeros((count,), np.float32),
+        "activations": np.zeros((count,), np.int32),
+        "mask": np.zeros((count, samples), bool),
+    }
+    if windows:
+        out["round_mask"] = np.zeros((windows, count, samples), bool)
+    return out
+
+
 @dataclass
 class FederatedDataset:
     """Client-indexed shards + metadata.  ``arrays()`` yields the engine's
@@ -108,34 +132,72 @@ class FederatedDataset:
         pad = (-N) % multiple
         if pad == 0:
             return self
-        total = N + pad
 
-        def _rows(a, fill=0):
-            shape = (pad,) + a.shape[1:]
-            return np.concatenate([a, np.full(shape, fill, a.dtype)])
-
+        # the shared inert-client contract: all-False mask, zero sizes
+        blank = inert_clients(pad, self.samples, self.x.shape[2],
+                              windows=self.windows, x_dtype=self.x.dtype,
+                              y_dtype=self.y.dtype)
         mask = (
             np.ones((N, self.samples), bool) if self.mask is None
             else self.mask
         )
         return FederatedDataset(
             name=self.name,
-            x=_rows(self.x),
-            y=_rows(self.y),
-            sizes=_rows(self.sizes),
-            activations=_rows(self.activations),
+            x=np.concatenate([self.x, blank["x"]]),
+            y=np.concatenate([self.y, blank["y"]]),
+            sizes=np.concatenate([self.sizes,
+                                  blank["sizes"].astype(self.sizes.dtype)]),
+            activations=np.concatenate([self.activations,
+                                        blank["activations"]]),
             scenario=self.scenario,
-            mask=_rows(mask, fill=False),
+            mask=np.concatenate([mask, blank["mask"]]),
             round_mask=None if self.round_mask is None else np.concatenate(
-                [self.round_mask,
-                 np.zeros((self.windows, pad, self.samples), bool)], axis=1
+                [self.round_mask, blank["round_mask"]], axis=1
             ),
             poisoners=None if self.poisoners is None
-            else _rows(self.poisoners, fill=False),
+            else np.concatenate([self.poisoners, np.zeros(pad, bool)]),
             fallback=self.fallback,
             num_classes=self.num_classes,
             meta={**self.meta, "real_clients": N, "padded_clients": pad},
         )
+
+    # ------------------------------------------------------------------
+    def cohort_arrays(self, idx, valid=None) -> dict:
+        """Materialize ONLY a cohort's client shards for the host-store
+        engine (``FedConfig.cohort_size``): fancy-index the K selected
+        clients' arrays and overwrite underfill slots (``valid`` False —
+        fewer than K eligible clients) with inert dummy clients (the
+        shared all-False-mask/zero-sizes contract of ``inert_clients``).
+        The dict carries the replicated ``cohort_valid`` preselection mask
+        the round body consumes instead of running on-device selection,
+        and a sample ``mask`` is always present (all-True on maskless
+        fleets) so the cohort engine's jit signature is stable across
+        fleets and rounds."""
+        idx = np.asarray(idx)
+        k = idx.shape[0]
+        valid = (np.ones((k,), bool) if valid is None
+                 else np.asarray(valid, bool))
+        out = {
+            "x": self.x[idx],
+            "y": self.y[idx],
+            "sizes": self.sizes[idx].astype(np.float32),
+            "activations": self.activations[idx],
+            "mask": (np.ones((k, self.samples), bool) if self.mask is None
+                     else self.mask[idx]),
+            "cohort_valid": valid,
+        }
+        if self.round_mask is not None:
+            out["round_mask"] = self.round_mask[:, idx]
+        hole = ~valid
+        if hole.any():
+            blank = inert_clients(int(hole.sum()), self.samples,
+                                  self.x.shape[2], windows=self.windows,
+                                  x_dtype=self.x.dtype, y_dtype=self.y.dtype)
+            for key in ("x", "y", "sizes", "activations", "mask"):
+                out[key][hole] = blank[key]
+            if self.round_mask is not None:
+                out["round_mask"][:, hole] = blank["round_mask"]
+        return out
 
     # ------------------------------------------------------------------
     def client_extents(self) -> np.ndarray:
@@ -231,13 +293,15 @@ class FederatedDataset:
         px, py, pm, pperm, pvalid, pact, prm = [], [], [], [], [], [], []
         for L in widths:
             rows = shards * caps[L]
-            xb = np.zeros((rows, L, dim), np.float32)
-            yb = np.zeros((rows, L), np.int32)
-            mb = np.zeros((rows, L), bool)
+            # dummy fill rows obey the shared inert-client contract
+            # (all-False mask -> exactly-zero local-SGD delta); real
+            # clients overwrite their row below
+            blank = inert_clients(rows, L, dim, windows=W)
+            xb, yb, mb = blank["x"], blank["y"], blank["mask"]
+            act = blank["activations"]
+            rmb = blank["round_mask"] if W else None
             perm = np.zeros((rows,), np.int32)
             valid = np.zeros((rows,), bool)
-            act = np.zeros((rows,), np.int32)
-            rmb = np.zeros((W, rows, L), bool) if W else None
             for s in range(shards):
                 for j, cid in enumerate(ids[L][s]):
                     r = s * caps[L] + j
@@ -297,6 +361,136 @@ class FederatedDataset:
                 f"unknown layout {layout!r}: expected auto | dense | packed"
             )
         return self.padded_to(shards).arrays()
+
+
+class VirtualFleet:
+    """Lazy synthetic fleet for host-store cohort runs: ``num_clients`` is
+    a property of this OBJECT, never of a materialized ``(N, n, dim)``
+    array.  The fleet tiles the paper's 12 Table II profiles (client ``i``
+    inherits profile ``i % 12``, the ``scaled`` builder's layout) with the
+    last ``num_poisoners`` clients label-flipped — but stores only the 24
+    distinct profile shards (12 honest + the same 12 poisoned).
+    ``cohort_arrays`` gathers a cohort's rows from the device-resident
+    profile table, so a million-client fleet costs O(profiles * n) host
+    and device memory and each round moves only the (K,) profile indices —
+    no O(K * n * dim) host->device sample transfer, let alone O(N).
+
+    Duck-types the cohort slice of ``FederatedDataset`` (``num_clients``,
+    ``samples``, ``windows``, ``poisoners``, ``cohort_arrays``);
+    ``materialize()`` yields the dense whole-fleet view for the K >= N
+    resident delegation."""
+
+    def __init__(self, num_clients: int, *, samples_per_client: int = 200,
+                 num_poisoners: Optional[int] = None, flip_frac: float = 0.6,
+                 seed: int = 0, source=None):
+        from repro.core.resources import POISON_FRAC
+
+        if num_poisoners is None:
+            num_poisoners = int(round(num_clients * POISON_FRAC))
+        if num_poisoners > num_clients:
+            raise ValueError(
+                f"num_poisoners={num_poisoners} exceeds the "
+                f"{num_clients}-client fleet"
+            )
+        self.name = "virtual"
+        self.num_clients = num_clients
+        self.num_poisoners = num_poisoners
+        self.seed = seed
+        self.scenario = None
+        self.fallback = False
+        # 24 base rows: 0-11 the honest Table II profiles, 12-23 the same
+        # profiles with the poisoners' label flip applied
+        self._base = scaled_fleet(
+            24, seed=seed, num_poisoners=12, flip_frac=flip_frac,
+            samples_per_client=samples_per_client, source=source,
+        )
+        self._base_dev = None  # device-resident profile table, built lazily
+        self._gather = None  # jitted cohort gather, built with the table
+
+    @property
+    def samples(self) -> int:
+        return self._base["x"].shape[1]
+
+    @property
+    def windows(self) -> int:
+        return 0
+
+    @property
+    def poisoners(self) -> np.ndarray:
+        mask = np.zeros(self.num_clients, bool)
+        if self.num_poisoners:
+            mask[-self.num_poisoners:] = True
+        return mask
+
+    def _profiles(self, idx) -> np.ndarray:
+        """cid -> base profile row: honest clients map to their tiled
+        Table II profile, the poisoned tail to its flipped twin."""
+        idx = np.asarray(idx)
+        poisoned = idx >= self.num_clients - self.num_poisoners
+        return np.where(poisoned, idx % 12 + 12, idx % 12).astype(np.int32)
+
+    def cohort_arrays(self, idx, valid=None) -> dict:
+        """Device-side cohort gather: the (K,) profile map indexes the
+        resident (25, n, dim) table (row 24 is the appended inert row that
+        underfill slots read — all-False mask, zero sizes, the
+        ``inert_clients`` contract), so per-round host->device traffic is
+        O(K) indices, not O(K * n * dim) samples.  The gather itself is one
+        jitted call (static K across rounds, so it compiles once): fusing
+        the per-field gathers cuts the per-round dispatch + allocation cost
+        to the unavoidable (K, n, dim) materialization."""
+        import jax
+        import jax.numpy as jnp
+
+        prof = self._profiles(idx)
+        k = prof.shape[0]
+        valid = (np.ones((k,), bool) if valid is None
+                 else np.asarray(valid, bool))
+        if self._base_dev is None:
+            blank = inert_clients(1, self.samples, self._base["x"].shape[2])
+            self._base_dev = (
+                jnp.asarray(np.concatenate([self._base["x"], blank["x"]])),
+                jnp.asarray(np.concatenate([self._base["y"], blank["y"]])),
+                jnp.asarray(np.concatenate(
+                    [self._base["sizes"].astype(np.float32), blank["sizes"]]
+                )),
+                jnp.asarray(np.concatenate(
+                    [self._base["activations"].astype(np.int32),
+                     blank["activations"]]
+                )),
+            )
+
+            def _gather(bx, by, bsz, bact, rows, vld):
+                return {
+                    "x": bx[rows],
+                    "y": by[rows],
+                    "sizes": bsz[rows],
+                    "activations": bact[rows],
+                    "mask": jnp.broadcast_to(
+                        vld[:, None], (rows.shape[0], bx.shape[1])
+                    ),
+                    "cohort_valid": vld,
+                }
+
+            self._gather = jax.jit(_gather)
+        # invalid slots read the inert row: zero sizes/activations fall out
+        # of the table row itself, no host-side masking pass
+        rows = jnp.asarray(np.where(valid, prof, 24))
+        return self._gather(*self._base_dev, rows, jnp.asarray(valid))
+
+    def materialize(self) -> FederatedDataset:
+        """Dense whole-fleet view (host-side profile gather) for small
+        fleets — the K >= N resident delegation path.  Maskless, so the
+        resident engine runs its seed-exact dense vmap."""
+        prof = self._profiles(np.arange(self.num_clients))
+        return FederatedDataset(
+            name="virtual",
+            x=self._base["x"][prof],
+            y=self._base["y"][prof],
+            sizes=self._base["sizes"][prof].astype(np.float32),
+            activations=self._base["activations"][prof],
+            poisoners=self.poisoners,
+            meta={"profiles": 24, "seed": self.seed},
+        )
 
 
 BUILDERS: Dict[str, Callable] = {}
