@@ -39,6 +39,10 @@ path.  The ``cohort`` axis prices the host-store cohort engine
 (``FedConfig.cohort_size``) at fleet sizes up to 1M clients x cohort sizes
 K — store-build time separate from steady rounds/sec — plus an in-run
 ``resident`` N=2048 ceiling the gate's cohort win condition leans on.
+The ``compress`` axis prices the uplink-compression modes (qsgd 8/4-bit
+stochastic quantization, magnitude top-k, vs the dense baseline) inside
+the same jitted scan, recording payload bytes/client next to the dense
+4*D so the gate can enforce the nominal compression ratios intra-run.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
@@ -85,6 +89,18 @@ QUICK_COHORT_FLEETS = (2048, 65536)
 COHORT_SIZES = (256, 512)
 QUICK_COHORT_SIZES = (512,)
 COHORT_WIN_N = 2048  # fleet whose resident ceiling is re-measured in-run
+COMPRESS_SIZES = (128, 512)
+QUICK_COMPRESS_SIZES = (128,)
+# uplink compression modes priced against the dense baseline; each leaf also
+# records payload_bytes_per_client vs dense_bytes_per_client (4 * D), the
+# intra-run pair the perf gate's compress win condition checks against the
+# nominal ratios (qsgd-8 <= 1/2, qsgd-4 <= 1/4, topk <= 1/2 of dense).
+COMPRESS_MODES = (
+    ("none", {}),
+    ("qsgd8", dict(compress="qsgd", compress_bits=8)),
+    ("qsgd4", dict(compress="qsgd", compress_bits=4)),
+    ("topk", dict(compress="topk")),  # compress_k=None -> D // 32
+)
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 QUICK_REPEATS = 3  # repeat-median absorbs CI runner jitter
 FULL_REPEATS = 2
@@ -92,9 +108,9 @@ FULL_REPEATS = 2
 
 def _make(n: int, *, mesh_shape: int | None = None, defense: str = "none",
           scenario: str | None = None, select_frac: float | None = None,
-          layout: str = "auto"):
+          layout: str = "auto", **fed_kw):
     fed = fleet_fed(n, local_epochs=1, local_batch_size=20, defense=defense,
-                    mesh_shape=mesh_shape, select_frac=select_frac)
+                    mesh_shape=mesh_shape, select_frac=select_frac, **fed_kw)
     engine = FedAREngine(small_model(32), fed, TaskRequirement())
     if scenario is None or scenario == "dense":
         raw = scaled_fleet(n, samples_per_client=SAMPLES)
@@ -321,6 +337,29 @@ def bench_cohort(quick: bool = False) -> dict:
     return out
 
 
+def bench_compress(quick: bool = False) -> dict:
+    """rounds/sec of the scan engine per uplink compression mode, plus the
+    payload accounting the gate's compress win condition checks: each leaf
+    carries ``payload_bytes_per_client`` (the strategy's encoded uplink
+    size) next to ``dense_bytes_per_client`` (4 * D fp32) — measured
+    intra-run, so the nominal-ratio check needs no machine calibration.
+    The quantize/pack work rides inside the same jitted scan, so the
+    rounds/sec leaves also feed the ordinary regression comparison."""
+    out = {}
+    for n in QUICK_COMPRESS_SIZES if quick else COMPRESS_SIZES:
+        out[str(n)] = {}
+        for mode, kw in COMPRESS_MODES:
+            engine, data = _make(n, **kw)
+            leaf = _time_scan(engine, data, rounds=4,
+                              repeats=_repeats(quick))
+            leaf["payload_bytes_per_client"] = int(
+                engine.compression.payload_nbytes(engine.dim)
+            )
+            leaf["dense_bytes_per_client"] = 4 * engine.dim
+            out[str(n)][mode] = leaf
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -346,7 +385,7 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
 
 
 def write_json(summary, devices=None, defense=None, scenario=None,
-               gated=None, model_family=None, cohort=None,
+               gated=None, model_family=None, cohort=None, compress=None,
                path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
@@ -361,6 +400,8 @@ def write_json(summary, devices=None, defense=None, scenario=None,
         payload["model_family_rounds_per_sec"] = model_family
     if cohort is not None:
         payload["cohort_rounds_per_sec"] = cohort
+    if compress is not None:
+        payload["compress_rounds_per_sec"] = compress
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -398,7 +439,9 @@ def main() -> None:
     gated = bench_gated(quick=quick)
     family = bench_model_family(quick=quick)
     cohort = bench_cohort(quick=quick)
-    write_json(summary, devices, defense, scenario, gated, family, cohort)
+    compress = bench_compress(quick=quick)
+    write_json(summary, devices, defense, scenario, gated, family, cohort,
+               compress)
     for k, per_n in devices.items():
         for n, v in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / _rps(v), 1),
@@ -422,6 +465,10 @@ def main() -> None:
     for n, per_k in cohort.items():
         for k, v in per_k.items():
             rows.append((f"engine_cohort_N{n}_{k}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
+    for n, per_c in compress.items():
+        for mode, v in per_c.items():
+            rows.append((f"engine_scan_N{n}_compress_{mode}",
                          round(1e6 / _rps(v), 1), round(_rps(v), 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

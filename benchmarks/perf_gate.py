@@ -46,6 +46,15 @@ A second intra-run invariant covers the host-store cohort engine
 ``(1 - WIN_SLACK)`` of it — a K-client cohort round does strictly less
 compute than the resident full-fleet round, so falling below that ceiling
 means the host sampling/gather/scatter pipeline ate the win.
+
+A third intra-run invariant covers uplink compression
+(``compress_rounds_per_sec``): every mode leaf records its
+``payload_bytes_per_client`` next to the same-run
+``dense_bytes_per_client`` (4 * D fp32), and the gate enforces the
+nominal ratios — qsgd-8 at most 1/2 of dense, qsgd-4 at most 1/4, topk
+at most 1/2 — so a packing change that silently fattens the encoded
+uplink fails CI even though rounds/sec look fine.  Byte accounting is
+exact (no timer jitter), so no slack applies.
 """
 from __future__ import annotations
 
@@ -90,7 +99,8 @@ def iter_axes(payload: dict) -> Iterator[Tuple[str, float]]:
                     yield f"rounds_per_sec/{n}/{key}", float(entry[key])
     for axis in ("sharded_rounds_per_sec_by_devices", "defense_rounds_per_sec",
                  "scenario_rounds_per_sec", "gated_rounds_per_sec",
-                 "model_family_rounds_per_sec", "cohort_rounds_per_sec"):
+                 "model_family_rounds_per_sec", "cohort_rounds_per_sec",
+                 "compress_rounds_per_sec"):
         for outer, inner in payload.get(axis, {}).items():
             if not isinstance(inner, dict):
                 continue
@@ -188,6 +198,45 @@ def cohort_win_condition(fresh: dict, slack: float = WIN_SLACK):
     return violations, checked
 
 
+# nominal payload ceilings per compression mode, as a fraction of the dense
+# 4*D uplink measured in the same run.  qsgd-8: 1 byte/coord + the fp32
+# row scale; qsgd-4: two coords/byte; topk: 8k bytes at the default
+# k = D // 32 -> D/4 bytes.  Exact byte accounting — no timer slack.
+_COMPRESS_RATIO_BOUNDS = {
+    "none": 1.0,
+    "qsgd8": 0.5,
+    "qsgd4": 0.25,
+    "topk": 0.5,
+}
+
+
+def compress_win_condition(fresh: dict):
+    """Uplink-payload win condition, intra-run like the others: every
+    ``compress_rounds_per_sec`` leaf that carries both byte counters must
+    keep ``payload_bytes_per_client`` at or under its mode's nominal
+    fraction of the same-leaf ``dense_bytes_per_client``.  Modes without a
+    committed bound are skipped.  Returns (violations, checked) where each
+    violation is (fleet, mode, payload_bytes, bound_bytes)."""
+    violations, checked = [], 0
+    for fleet, inner in fresh.get("compress_rounds_per_sec", {}).items():
+        if not isinstance(inner, dict):
+            continue
+        for mode, entry in inner.items():
+            bound = _COMPRESS_RATIO_BOUNDS.get(mode)
+            if bound is None or not isinstance(entry, dict):
+                continue
+            payload = entry.get("payload_bytes_per_client")
+            dense = entry.get("dense_bytes_per_client")
+            if payload is None or dense is None:
+                continue
+            checked += 1
+            if float(payload) > bound * float(dense):
+                violations.append(
+                    (fleet, mode, float(payload), bound * float(dense))
+                )
+    return violations, checked
+
+
 def main() -> int:
     argv = sys.argv[1:]
     tol = DEFAULT_TOLERANCE
@@ -220,6 +269,9 @@ def main() -> int:
     cohort_wins, cohort_checked = cohort_win_condition(fresh)
     print(f"perf gate: {cohort_checked} cohort-vs-resident win pairs "
           f"checked (intra-run, {WIN_SLACK:.0%} slack)")
+    compress_wins, compress_checked = compress_win_condition(fresh)
+    print(f"perf gate: {compress_checked} compress payload bounds checked "
+          f"(intra-run byte accounting, exact)")
     rc = 0
     if failures:
         print("REGRESSIONS (fresh < (1 - tol) * baseline):")
@@ -239,6 +291,13 @@ def main() -> int:
         for fleet, kn, v, _, d in cohort_wins:
             print(f"  cohort_rounds_per_sec/{fleet}: {kn} {v:.2f} < "
                   f"resident {d:.2f} rounds/sec")
+        rc = 1
+    if compress_wins:
+        print("UPLINK PAYLOAD TAX (encoded payload above the mode's nominal "
+              "fraction of dense):")
+        for fleet, mode, payload, bound in compress_wins:
+            print(f"  compress_rounds_per_sec/{fleet}: {mode} "
+                  f"{payload:.0f} bytes/client > bound {bound:.0f}")
         rc = 1
     if rc == 0:
         print("perf gate: OK")

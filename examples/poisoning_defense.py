@@ -41,6 +41,17 @@ def main():
                     choices=["synthetic", "mnist", "emnist"],
                     help="sample pool for the fleets (cached IDX files or "
                          "the deterministic offline fallback)")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "qsgd", "topk"],
+                    help="uplink delta compression with error feedback; "
+                         "both the defended and undefended runs use it, so "
+                         "the comparison stays apples-to-apples")
+    ap.add_argument("--compress_bits", type=int, default=8,
+                    choices=[4, 8],
+                    help="qsgd quantization width (bits per coordinate)")
+    ap.add_argument("--compress_k", type=int, default=None,
+                    help="topk coordinates kept per client "
+                         "(default: model_dim // 32)")
     ap.add_argument("--cache_dir", default=None,
                     help="IDX cache dir for mnist/emnist (default: "
                          "$FEDAR_DATA_DIR or ~/.cache/fedar)")
@@ -86,12 +97,16 @@ def main():
         print(warn)
     ex, ey = eval_src.sample(500, seed=99)
 
+    compress_kw = dict(compress=args.compress,
+                       compress_bits=args.compress_bits,
+                       compress_k=args.compress_k)
+
     def run(defense: str):
         if paper_scale:
             fed = fleet_fed(
                 12, local_epochs=3, timeout=30.0, defense=defense,
                 deviation_gamma=2.5 if defense != "none" else 1e9,
-                mesh_shape=mesh,
+                mesh_shape=mesh, **compress_kw,
             )
             data = table2_fleet(samples_per_client=args.samples,
                                 flip_frac=0.8, source=source)
@@ -103,7 +118,7 @@ def main():
                 args.clients, local_epochs=2, defense=defense,
                 num_poisoners=n_syb, num_starved=0, client_fraction=1.0,
                 deviation_gamma=1e9,  # isolate the similarity defense
-                mesh_shape=mesh,
+                mesh_shape=mesh, **compress_kw,
             )
             data, sybils = sybil_fleet(args.clients, n_syb,
                                        samples_per_client=args.samples,

@@ -70,6 +70,18 @@ def main():
                          f"for scaled fleets past {AUTO_COHORT_CLIENTS} "
                          "clients; pass K >= clients to force the "
                          "resident engine")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "qsgd", "topk"],
+                    help="uplink delta compression with error feedback "
+                         "(core/compress.py): qsgd stochastic quantization "
+                         "or magnitude top-k; none is bit-identical to the "
+                         "uncompressed engine")
+    ap.add_argument("--compress_bits", type=int, default=8,
+                    choices=[4, 8],
+                    help="qsgd quantization width (bits per coordinate)")
+    ap.add_argument("--compress_k", type=int, default=None,
+                    help="topk coordinates kept per client "
+                         "(default: model_dim // 32)")
     ap.add_argument("--alpha", type=float, default=None,
                     help="Dirichlet concentration for the skew scenarios; "
                          "default 0.5")
@@ -175,8 +187,16 @@ def main():
                     else "foolsgold_sketch",
                     select_frac=args.select_frac,
                     cohort_size=cohort,
+                    compress=args.compress,
+                    compress_bits=args.compress_bits,
+                    compress_k=args.compress_k,
                     mesh_shape=args.devices if args.devices > 1 else None)
     server = FedARServer(MnistConfig(), fed, TaskRequirement())
+    if args.compress != "none":
+        payload = server.engine.compression.payload_nbytes(server.engine.dim)
+        print(f"[uplink] compress={args.compress}: "
+              f"{payload} bytes/client/round "
+              f"vs dense {4 * server.engine.dim}")
     if server.mesh is not None:
         k = cohort if server.cohort_mode else ds.num_clients
         print(f"mesh: {server.mesh.devices.size} client shards "

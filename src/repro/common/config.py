@@ -248,6 +248,21 @@ class FedConfig:
     # similarity block-product backend: auto (Pallas kernel on TPU, einsum
     # elsewhere) | kernel | einsum — mirrors ``agg_impl``
     defense_impl: str = "auto"
+    # --- uplink delta compression (core/compress.py) ---
+    # compress: what each selected client sends instead of its raw fp32 (D,)
+    # delta; residuals (error feedback) ride the engine carry / ClientStore.
+    #   "none" -- raw deltas, bit-identical to the uncompressed engine
+    #   "qsgd" -- stochastic uniform quantization at ``compress_bits`` levels
+    #             (unbiased; payload ~ D*bits/8 + 4 bytes per client)
+    #   "topk" -- magnitude top-``compress_k`` sparsification (biased;
+    #             error feedback makes the bias telescope out; payload 8k
+    #             bytes per client)
+    compress: str = "none"
+    compress_bits: int = 8  # qsgd levels = 2^(bits-1) - 1; 4 or 8
+    compress_k: Optional[int] = None  # topk coordinates kept; None -> D // 32
+    # pack/unpack backend: auto (Pallas kernel on TPU, einsum elsewhere) |
+    # kernel | einsum — mirrors ``agg_impl``/``defense_impl``
+    compress_impl: str = "auto"
     # cluster-aware knobs: soft cluster mass m_i = 1 + sum_j relu(cs_ij)^power;
     # clients keep full weight while m_i <= slack * median(m), larger
     # (sybil-sized) clusters decay as (slack*median/m)^sharpness

@@ -10,6 +10,13 @@ reduction becomes a psum across client shards.  The Pallas kernel
 kernel; ``fedavg_aggregate`` routes through it on accelerators
 (``impl="auto"``) and falls back to an einsum on CPU.
 
+With ``FedConfig.compress`` != "none" the engine decodes each client's
+compressed uplink payload (``core/compress.py``) BEFORE this boundary:
+every reduction here — the fused deviation psum, the weighted numerator,
+``reduce_tree`` — consumes the decoded rows, so the O(N*D) client payload
+is what compression shrinks while the (D,) cross-shard partials keep their
+pinned reduction order and numerics.
+
 Modes:
   fedavg    -- synchronous FedAvg [24]: wait for everyone (stragglers
                included); round time = max(latency).

@@ -50,7 +50,7 @@ class HostResources(NamedTuple):
 _COLUMNS = (
     "score", "participations", "failures",
     "memory", "bandwidth", "battery", "compute",
-    "history", "last_selected",
+    "history", "residual", "last_selected",
 )
 
 
@@ -58,7 +58,7 @@ class ClientStore:
     """Numpy-backed per-client table; O(N * smallstate) host memory."""
 
     def __init__(self, fed: FedConfig, history_dim: int, *,
-                 num_shards: int = 1):
+                 residual_dim: int = 0, num_shards: int = 1):
         n = fed.num_clients
         if num_shards < 1 or n % num_shards:
             raise ValueError(
@@ -83,6 +83,9 @@ class ClientStore:
         self.battery = np.array(res.battery)
         self.compute = np.array(res.compute)
         self.history = np.zeros((n, history_dim), np.float32)
+        # error-feedback residuals (core/compress.py); width 0 when the
+        # cohort engine runs uncompressed
+        self.residual = np.zeros((n, residual_dim), np.float32)
         self.last_selected = np.full(n, -1, np.int32)
         # 0-d array (not a python int) so the ckpt pytree flattens it
         self.round_idx = np.zeros((), np.int32)
@@ -95,6 +98,10 @@ class ClientStore:
     @property
     def history_dim(self) -> int:
         return self.history.shape[1]
+
+    @property
+    def residual_dim(self) -> int:
+        return self.residual.shape[1]
 
     def block(self, shard: int) -> dict:
         """Shard ``shard``'s contiguous column views (zero-copy): clients
@@ -130,10 +137,11 @@ class ClientStore:
             "battery": self.battery[idx],
             "compute": self.compute[idx],
             "history": self.history[idx],
+            "residual": self.residual[idx],
         }
 
     def scatter_round(self, idx, valid, *, trust: TrustState, battery,
-                      history) -> None:
+                      history, residual=None) -> None:
         """Write the round's device results back into the table — only the
         ``valid`` cohort slots land (underfill slots carry garbage rows
         gathered from client 0 and must never scatter)."""
@@ -145,6 +153,8 @@ class ClientStore:
         self.battery[idx] = np.asarray(battery)[keep]
         if self.history_dim:
             self.history[idx] = np.asarray(history)[keep]
+        if self.residual_dim and residual is not None:
+            self.residual[idx] = np.asarray(residual)[keep]
 
     def finish_round(self, idx, valid, eligible) -> None:
         """Host-side evolution of the NON-cohort population, mirroring the

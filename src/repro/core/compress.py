@@ -1,0 +1,250 @@
+"""Uplink delta-compression subsystem (selected via ``FedConfig.compress``).
+
+Resource-constrained FL surveys rank uplink payload as the binding
+constraint for mobile-robot fleets, yet the engine's clients ship raw fp32
+``(D,)`` deltas.  This registry mirrors ``core/defense.py``: a strategy
+owns the per-client error-feedback residual block carried in the engine
+scan state (and the ``ClientStore`` ``residual`` column in cohort mode)
+and the encode/decode pair applied at the client->aggregator boundary:
+
+  ``none`` -- raw deltas, zero-width residual; the engine skips the
+              roundtrip entirely, bit-identical to the uncompressed path.
+  ``qsgd`` -- stochastic uniform quantization (Alistarh et al.) at
+              ``compress_bits`` in {4, 8}: per-client max-|v| scale, codes
+              stochastically rounded so the decode is UNBIASED over keys,
+              packed to uint8 (two nibbles per byte at 4 bits) via
+              ``kernels/compress.py``.  Payload ~ D*bits/8 + 4 bytes per
+              client (vs 4*D dense).
+  ``topk`` -- magnitude top-``compress_k`` sparsification: the k largest-
+              |v| coordinates ship as (value, index) pairs — 8*k bytes per
+              client.  Biased, so error feedback is what makes it sound.
+
+Error feedback (EF-SGD): each client compresses ``delta + residual`` and
+carries ``residual' = (delta + residual) - decode(payload)`` to the next
+round it transmits.  Unselected clients keep their residual untouched and
+contribute exact zeros.  The sum of decoded payloads plus the final
+residual telescopes to the sum of raw deltas (pinned to fp32 tolerance by
+``tests/test_compress.py``), so compression error never accumulates.
+
+Determinism across shardings: the stochastic-rounding bits are drawn from
+per-client keys folded from the CANONICAL client id (not the shard-local
+row), so a 1-device run and an 8-shard run quantize bit-identically.
+
+Payload model (what actually crosses which wire): the encode/decode pair
+compresses the per-client uplink — the (N, D) block that selection-gated
+gathers, the deviation screen and the defense history would otherwise
+consume at fp32.  The cross-shard reduction (``MeshComms.reduce_tree`` /
+the aggregation psum) runs over the already-reduced (D,) partial per
+device, which is O(D) independent of N either way; decoded-then-reduced
+keeps those collectives' pinned numerics while the O(N*D) client payload
+drops by the mode's nominal ratio.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FedConfig
+from repro.kernels import ops
+
+__all__ = ["CompressionStrategy", "NoCompression", "QSGDCompression",
+           "TopKCompression", "make_compression"]
+
+
+class CompressionStrategy:
+    """Interface the engine round body calls, strategy-agnostically.
+
+    ``active``          -- False only for ``none``; lets the engine skip
+                           the roundtrip (and carry a width-0 residual) so
+                           the uncompressed path stays bit-identical.
+    ``residual_dim``    -- width of the carried per-client error-feedback
+                           block (0 = stateless).
+    ``payload_nbytes``  -- nominal uplink bytes per client per round (the
+                           bench/perf-gate payload model).
+    ``encode``          -- compress ``deltas + residual`` (per-row keys for
+                           stochastic codes); returns the payload pytree and
+                           the post-encode residual for every row.  The
+                           engine masks both on the transmit mask.
+    ``decode``          -- payload pytree -> (n, D) fp32 decoded deltas.
+    """
+
+    name = "none"
+    active = False
+
+    def residual_dim(self, model_dim: int) -> int:
+        return 0
+
+    def payload_nbytes(self, model_dim: int) -> int:
+        return 4 * model_dim  # dense fp32
+
+    def encode(self, deltas, residual, keys) -> Tuple[dict, jnp.ndarray]:
+        raise NotImplementedError
+
+    def decode(self, payload, model_dim: int):
+        raise NotImplementedError
+
+    def roundtrip(self, deltas, residual, transmit, keys):
+        """The engine's one call: encode/decode ``deltas + residual`` and
+        apply error feedback, gated on the shard-local ``transmit`` mask.
+        Returns ``(decoded, new_residual, payload)`` where non-transmitting
+        rows decode to exact zeros and keep their residual untouched."""
+        payload, res = self.encode(deltas, residual, keys)
+        dec = self.decode(payload, deltas.shape[-1])
+        m = transmit[:, None]
+        return (
+            jnp.where(m, dec, 0.0),
+            jnp.where(m, res, residual),
+            payload,
+        )
+
+
+class NoCompression(CompressionStrategy):
+    """Raw fp32 deltas; the engine never calls encode/decode."""
+
+    def encode(self, deltas, residual, keys):
+        return {"dense": deltas + residual}, jnp.zeros_like(residual)
+
+    def decode(self, payload, model_dim: int):
+        return payload["dense"]
+
+
+class QSGDCompression(CompressionStrategy):
+    """Stochastic uniform quantization at ``compress_bits`` levels.
+
+    ``L = 2^(bits-1) - 1`` levels per sign; code ``q = round_stoch(|v| /
+    scale * L) * sign(v)`` with per-row ``scale = max|v|``, shipped
+    offset-encoded (``q + L``) in packed uint8.  Stochastic rounding makes
+    the decode ``q * scale / L`` unbiased in expectation over keys; an
+    all-zero row (scale 0) encodes and decodes to exact zeros."""
+
+    name = "qsgd"
+    active = True
+
+    def __init__(self, fed: FedConfig, model_dim: int):
+        if fed.compress_bits not in (4, 8):
+            raise ValueError(
+                f"FedConfig.compress_bits={fed.compress_bits!r} unsupported "
+                "for compress='qsgd' — the uint8 pack kernel handles 4 "
+                "(two codes per byte) or 8 (one code per byte)"
+            )
+        self.bits = fed.compress_bits
+        self.levels = 2 ** (fed.compress_bits - 1) - 1
+        self.impl = fed.compress_impl
+
+    def residual_dim(self, model_dim: int) -> int:
+        return model_dim
+
+    def payload_nbytes(self, model_dim: int) -> int:
+        return math.ceil(model_dim * self.bits / 8) + 4  # codes + fp32 scale
+
+    def _use_pallas(self) -> bool:
+        return ops.resolve_impl(self.impl, "compress") == "kernel"
+
+    def encode(self, deltas, residual, keys):
+        v = (deltas + residual).astype(jnp.float32)
+        L = float(self.levels)
+        scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True)  # (n, 1)
+        safe = jnp.where(scale > 0.0, scale, 1.0)
+        u = jnp.abs(v) / safe * L  # in [0, L]
+        low = jnp.floor(u)
+        unif = jax.vmap(lambda k: jax.random.uniform(k, v.shape[-1:]))(keys)
+        q = (low + (unif < u - low)).astype(jnp.int32)  # stochastic round
+        q = jnp.where(scale > 0.0, q * jnp.sign(v).astype(jnp.int32), 0)
+        codes = (q + self.levels).astype(jnp.int32)  # offset to [0, 2L]
+        packed = ops.pack_codes(codes, bits=self.bits,
+                                use_pallas=self._use_pallas())
+        payload = {"codes": packed, "scale": scale.astype(jnp.float32)}
+        return payload, v - self.decode(payload, v.shape[-1])
+
+    def decode(self, payload, model_dim: int):
+        codes = ops.unpack_codes(payload["codes"], bits=self.bits,
+                                 dim=model_dim,
+                                 use_pallas=self._use_pallas())
+        q = codes.astype(jnp.float32) - float(self.levels)
+        return q * payload["scale"] / float(self.levels)
+
+
+class TopKCompression(CompressionStrategy):
+    """Magnitude top-``compress_k``: ship the k largest-|v| coordinates as
+    (value, index) pairs.  ``k == D`` is an exact identity; ``k`` defaults
+    to ``D // 32`` when ``FedConfig.compress_k`` is unset.  Biased — the
+    engine's error feedback carries what was dropped into the next round."""
+
+    name = "topk"
+    active = True
+
+    def __init__(self, fed: FedConfig, model_dim: int):
+        k = fed.compress_k if fed.compress_k is not None else max(
+            1, model_dim // 32
+        )
+        if not 1 <= k <= model_dim:
+            raise ValueError(
+                f"FedConfig.compress_k={fed.compress_k!r} out of range for "
+                f"compress='topk' with model_dim={model_dim} — need "
+                f"1 <= k <= D (k == D is the exact-identity degenerate case)"
+            )
+        self.k = int(k)
+        self.impl = fed.compress_impl
+
+    def residual_dim(self, model_dim: int) -> int:
+        return model_dim
+
+    def payload_nbytes(self, model_dim: int) -> int:
+        return 8 * self.k  # fp32 value + int32 index per kept coordinate
+
+    def encode(self, deltas, residual, keys):
+        v = (deltas + residual).astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.abs(v), self.k)
+        vals = jnp.take_along_axis(v, idx, axis=-1)
+        payload = {"vals": vals, "idx": idx.astype(jnp.int32)}
+        return payload, v - self.decode(payload, v.shape[-1])
+
+    def decode(self, payload, model_dim: int):
+        use_pallas = ops.resolve_impl(self.impl, "compress") == "kernel"
+        return ops.topk_decode(payload["vals"], payload["idx"], model_dim,
+                               use_pallas=use_pallas)
+
+
+_STRATEGIES = {
+    "none": NoCompression,
+    "qsgd": QSGDCompression,
+    "topk": TopKCompression,
+}
+
+
+def make_compression(fed: FedConfig, model_dim: int) -> CompressionStrategy:
+    """Build the strategy ``FedConfig.compress`` names (validating the
+    bits/k knobs and the aggregation-mode combo)."""
+    try:
+        cls = _STRATEGIES[fed.compress]
+    except KeyError:
+        raise ValueError(
+            f"unknown FedConfig.compress={fed.compress!r} "
+            f"(known: {sorted(_STRATEGIES)})"
+        ) from None
+    if cls is NoCompression:
+        return NoCompression()
+    if fed.aggregation in ("async", "async_seq"):
+        raise ValueError(
+            f"FedConfig.compress={fed.compress!r} does not compose with "
+            f"aggregation={fed.aggregation!r}: the buffered modes carry raw "
+            "per-client deltas across rounds, so the error-feedback residual "
+            "would double-count late arrivals — use aggregation='fedar' or "
+            "'fedavg', or compress='none'"
+        )
+    return cls(fed, model_dim)
+
+
+def client_keys(key, client_ids):
+    """Per-client stochastic-code keys folded from CANONICAL client ids, so
+    quantization bits are identical across 1-device and sharded runs."""
+    return jax.vmap(lambda c: jax.random.fold_in(key, c))(client_ids)
+
+
+def make_residual(num_clients: int, residual_dim: int,
+                  dtype=jnp.float32) -> Optional[jnp.ndarray]:
+    """Fresh all-zero residual block (width 0 when compression is off)."""
+    return jnp.zeros((num_clients, residual_dim), dtype)

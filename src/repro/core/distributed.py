@@ -72,6 +72,19 @@ class ClientComms:
         # gathered defense payload shapes, recorded at trace time — the
         # mesh tests assert the sketch defense ships (N, r) not (N, D)
         self.defense_gather_shapes: list = []
+        # per-leaf (shape, dtype.name) of each round's compressed uplink
+        # payload (``core/compress.py``), also trace-time — the mesh /
+        # bench tests assert the wire format stays packed (uint8 codes /
+        # (k,) pairs), not silently re-densified fp32
+        self.uplink_payload_shapes: list = []
+
+    def record_uplink(self, payload) -> None:
+        """Record a compression payload pytree's leaf shapes/dtypes (the
+        per-shard uplink that crosses the client->aggregator boundary)."""
+        self.uplink_payload_shapes.append(tuple(
+            (tuple(leaf.shape), jnp.asarray(leaf).dtype.name)
+            for leaf in jax.tree.leaves(payload)
+        ))
 
     def psum(self, x):
         """Sum a shard-local partial across the client axis."""

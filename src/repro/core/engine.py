@@ -78,6 +78,8 @@ from jax.experimental.shard_map import shard_map
 from repro.common.config import FedConfig
 from repro.configs.fedar_mnist import MnistConfig
 from repro.core import aggregation as agg
+from repro.core.compress import client_keys as compress_keys
+from repro.core.compress import make_compression
 from repro.core.defense import make_defense
 from repro.core.distributed import (
     ClientComms,
@@ -101,6 +103,11 @@ from repro.core.trust import TrustState, init_trust, update_trust
 from repro.kernels.ops import resolve_impl
 from repro.models.client import ClientModel
 from repro.models.mnist import MnistClientModel
+
+# Domain separator for the per-round compression key: folded off the round
+# key AFTER its pinned 3-way split (selection/latency/poison), so enabling
+# compression never shifts the random stream the goldens pin.
+_COMPRESS_KEY_FOLD = 0xC0DEC
 
 
 def flatten(params) -> jnp.ndarray:
@@ -137,6 +144,8 @@ class EngineState(NamedTuple):
     pending_issued: jnp.ndarray  # (N,) int32 round the update was computed
     pending_arrival: jnp.ndarray  # (N,) int32 round it lands at the server
     pending_valid: jnp.ndarray  # (N,) bool slot occupied
+    compress_residual: jnp.ndarray  # (N, D) error-feedback residual;
+    #                                 (N, 0) with compression off
     round_idx: jnp.ndarray  # () int32 communication round i
 
 
@@ -196,6 +205,7 @@ class FedAREngine:
         self.template = model.init(key)
         self.dim = flatten(self.template).shape[0]
         self.defense = make_defense(fed, self.dim)
+        self.compression = make_compression(fed, self.dim)
         self.resources0, self.poison_mask = make_fleet(
             fed.num_clients,
             num_starved=fed.num_starved,
@@ -240,6 +250,7 @@ class FedAREngine:
         N, D = self.fed.num_clients, self.dim
         fg_d = self.defense.history_dim(D)
         buf_d = D if self.fed.aggregation == "async" else 0
+        res_d = self.compression.residual_dim(D)
         return EngineState(
             params=flatten(self.template),
             trust=init_trust(N, self.fed),
@@ -250,6 +261,7 @@ class FedAREngine:
             pending_issued=jnp.zeros((N,), jnp.int32),
             pending_arrival=jnp.zeros((N,), jnp.int32),
             pending_valid=jnp.zeros((N,), bool),
+            compress_residual=jnp.zeros((N, res_d)),
             round_idx=jnp.zeros((), jnp.int32),
         )
 
@@ -270,6 +282,7 @@ class FedAREngine:
             pending_issued=Pr,
             pending_arrival=Pr,
             pending_valid=Pr,
+            compress_residual=Pc,
             round_idx=Pr,
         )
 
@@ -675,6 +688,35 @@ class FedAREngine:
             lat = jnp.where(jnp.asarray(force_straggler), fed.timeout * 3.0, lat)
         on_time = lat <= fed.timeout
 
+        # --- uplink compression (core/compress.py): transmitting clients
+        # send the encoded payload; the server decodes it and everything
+        # downstream (deviation screen, defense history, aggregation)
+        # consumes the DECODED rows.  Non-transmitting clients contribute
+        # exact zeros and keep their error-feedback residual untouched.
+        residual = state.compress_residual
+        if self.compression.active:
+            # fedavg waits for stragglers, so they transmit too; fedar's
+            # timeout-skipped clients never upload (async modes are
+            # rejected at construction)
+            transmit = comms.local(
+                selected if fed.aggregation == "fedavg"
+                else selected & on_time
+            )
+            # the gated compact view is a compute shortcut; post-decode the
+            # canonical rows are what every downstream op must see
+            delta_c = cohort = None
+            # stochastic codes keyed on the CANONICAL client id so 1-device
+            # and sharded runs quantize bit-identically (the round key's
+            # 3-way split above stays untouched for golden stability)
+            keys = compress_keys(
+                jax.random.fold_in(key, _COMPRESS_KEY_FOLD),
+                comms.local(jnp.arange(fed.num_clients, dtype=jnp.int32)),
+            )
+            deltas, residual, payload = self.compression.roundtrip(
+                deltas, residual, transmit, keys
+            )
+            comms.record_uplink(payload)
+
         # --- line 11: deviation ban + robust-defense weights
         if fed.aggregation == "async":
             # no-wait: every participant's update eventually lands, so
@@ -766,6 +808,7 @@ class FedAREngine:
             pending_issued=pending["issued"],
             pending_arrival=pending["arrival"],
             pending_valid=pending["valid"],
+            compress_residual=residual,
             round_idx=state.round_idx + 1,
         )
         outputs = RoundOutputs(
@@ -1052,8 +1095,11 @@ class CohortEngine:
         self.template = self.engine.template
         self.dim = self.engine.dim
         self.mesh = self.engine.mesh
+        self.compression = self.engine.compression
         self.store = ClientStore(
-            fed, self.engine.defense.history_dim(self.dim)
+            fed,
+            self.engine.defense.history_dim(self.dim),
+            residual_dim=self.engine.compression.residual_dim(self.dim),
         )
         self.poison_mask = self.store.poison_mask
         self.params = flatten(self.template)
@@ -1093,6 +1139,7 @@ class CohortEngine:
                 jnp.asarray(rows["compute"]),
             ),
             fg_history=jnp.asarray(rows["history"]),
+            compress_residual=jnp.asarray(rows["residual"]),
             round_idx=jnp.asarray(r, jnp.int32),
         )
         return state, data, idx, valid, elig
@@ -1116,6 +1163,7 @@ class CohortEngine:
             ),
             battery=np.asarray(state2.resources.battery),
             history=np.asarray(state2.fg_history),
+            residual=np.asarray(state2.compress_residual),
         )
         self.store.finish_round(idx, valid, elig)
         return idx, valid, out

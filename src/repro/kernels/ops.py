@@ -12,6 +12,9 @@ import functools
 import jax
 
 from repro.kernels import ref
+from repro.kernels.compress import pack_codes as _pack_codes_kernel
+from repro.kernels.compress import topk_decode as _topk_decode_kernel
+from repro.kernels.compress import unpack_codes as _unpack_codes_kernel
 from repro.kernels.fedavg_agg import fedavg_agg as _fedavg_agg_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.local_sgd import local_sgd_fused as _local_sgd_kernel
@@ -19,19 +22,20 @@ from repro.kernels.ssm_scan import ssm_scan as _ssm_kernel
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
-_IMPL_KINDS = ("sgd", "agg", "defense")
+_IMPL_KINDS = ("sgd", "agg", "defense", "compress")
 _IMPL_VALUES = ("auto", "kernel", "einsum")
 
 
 def resolve_impl(name: str, kind: str) -> str:
     """Resolve one of the engine's kernel-routing knobs (``FedConfig.sgd_impl``
-    / ``agg_impl`` / ``defense_impl``) to a concrete backend.
+    / ``agg_impl`` / ``defense_impl`` / ``compress_impl``) to a concrete
+    backend.
 
-    All three knobs share the same vocabulary: ``"auto"`` picks the Pallas
+    All the knobs share the same vocabulary: ``"auto"`` picks the Pallas
     kernel on a TPU backend and the XLA einsum path elsewhere; ``"kernel"`` /
     ``"einsum"`` force the choice (off-TPU the kernel runs under
     ``interpret=True``).  ``kind`` only scopes the error message so a typo in
-    any of the three knobs reports uniformly.
+    any of the knobs reports uniformly.
     """
     if kind not in _IMPL_KINDS:
         raise ValueError(
@@ -51,6 +55,33 @@ def fedavg_agg(deltas, weights, *, use_pallas: bool = True, interpret: bool | No
         return ref.fedavg_agg_ref(deltas, weights)
     itp = (not _ON_TPU) if interpret is None else interpret
     return _fedavg_agg_kernel(deltas, weights, interpret=itp)
+
+
+def pack_codes(codes, *, bits: int, use_pallas: bool = True,
+               interpret: bool | None = None):
+    """Quantization codes (N, D) -> packed uint8 (compression uplink)."""
+    if not use_pallas:
+        return ref.pack_codes_ref(codes, bits=bits)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _pack_codes_kernel(codes, bits=bits, interpret=itp)
+
+
+def unpack_codes(packed, *, bits: int, dim: int, use_pallas: bool = True,
+                 interpret: bool | None = None):
+    """Packed uint8 -> int32 codes (N, dim)."""
+    if not use_pallas:
+        return ref.unpack_codes_ref(packed, bits=bits, dim=dim)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _unpack_codes_kernel(packed, bits=bits, dim=dim, interpret=itp)
+
+
+def topk_decode(vals, idx, dim: int, *, use_pallas: bool = True,
+                interpret: bool | None = None):
+    """Sparse top-k (vals, idx) -> dense (N, dim) float32 scatter-add."""
+    if not use_pallas:
+        return ref.topk_decode_ref(vals, idx, dim)
+    itp = (not _ON_TPU) if interpret is None else interpret
+    return _topk_decode_kernel(vals, idx, dim, interpret=itp)
 
 
 def local_sgd(w1, b1, w2, b2, x, y, act, mask, *, lr: float, batch_size: int,

@@ -53,6 +53,41 @@ def local_sgd_ref(w1, b1, w2, b2, x, y, act, mask, *, lr: float,
             "b2": params[3]}
 
 
+def pack_codes_ref(codes, *, bits: int):
+    """Offset-encoded quantization codes (n, D) int in [0, 2^bits) ->
+    packed uint8.  bits=8: one code per byte (a cast).  bits=4: the row is
+    zero-padded to even width 2P and byte j holds code j in its low nibble
+    and code P + j in its high nibble (half-split, not interleaved — the
+    layout the Pallas kernel tiles without cross-lane shuffles)."""
+    n, d = codes.shape
+    c = codes.astype(jnp.int32)
+    if bits == 8:
+        return c.astype(jnp.uint8)
+    p = (d + 1) // 2
+    c = jnp.pad(c, ((0, 0), (0, 2 * p - d)))
+    return (c[:, :p] | (c[:, p:] << 4)).astype(jnp.uint8)
+
+
+def unpack_codes_ref(packed, *, bits: int, dim: int):
+    """Inverse of ``pack_codes_ref``: (n, P) uint8 -> (n, dim) int32."""
+    p32 = packed.astype(jnp.int32)
+    if bits == 8:
+        return p32[:, :dim]
+    full = jnp.concatenate([p32 & 0xF, (p32 >> 4) & 0xF], axis=-1)
+    return full[:, :dim]
+
+
+def topk_decode_ref(vals, idx, dim: int):
+    """Sparse (n, k) value/index pairs -> dense (n, dim) float32 via
+    scatter-ADD (duplicate indices accumulate, matching the kernel)."""
+    n, k = vals.shape
+    if k == 0:
+        return jnp.zeros((n, dim), jnp.float32)
+    out = jnp.zeros((n, dim), jnp.float32)
+    rows = jnp.arange(n)[:, None]
+    return out.at[rows, idx].add(vals.astype(jnp.float32))
+
+
 def sketch_similarity_ref(unit_loc, unit_full):
     """Defense similarity block: (M, K) @ (N, K).T -> (M, N) float32."""
     return jnp.einsum(

@@ -86,18 +86,14 @@ def test_resumed_scan_matches_uninterrupted(tmp_path):
     )
 
 
-def test_cohort_store_resume_matches_uninterrupted(tmp_path):
-    """A cohort run interrupted by ``save_store``/``restore_store`` lands
-    on the same store table and global model as an uninterrupted run:
-    cohort sampling is keyed on ``(seed, round)`` alone, so the resumed
-    server replays the exact same cohorts."""
+def _cohort_resume_roundtrip(tmp_path, **fed_kw):
     from repro.core.fedar import FedARServer
     from repro.data.datasets import VirtualFleet
 
     def _server():
         fed = fleet_fed(
             48, cohort_size=8, local_epochs=1,
-            defense="foolsgold_sketch", defense_sketch_dim=32,
+            defense="foolsgold_sketch", defense_sketch_dim=32, **fed_kw,
         )
         return FedARServer(small_model(16), fed, TaskRequirement())
 
@@ -133,6 +129,50 @@ def test_cohort_store_resume_matches_uninterrupted(tmp_path):
     ):
         np.testing.assert_array_equal(xi, yi)
         np.testing.assert_array_equal(xv, yv)
+    return ref
+
+
+def test_cohort_store_resume_matches_uninterrupted(tmp_path):
+    """A cohort run interrupted by ``save_store``/``restore_store`` lands
+    on the same store table and global model as an uninterrupted run:
+    cohort sampling is keyed on ``(seed, round)`` alone, so the resumed
+    server replays the exact same cohorts."""
+    _cohort_resume_roundtrip(tmp_path)
+
+
+def test_cohort_store_resume_with_compression_is_bit_exact(tmp_path):
+    """Compression composes with cohort mode + sketched defense, and the
+    error-feedback residual is part of the store table ``save_store``
+    round-trips: a qsgd-4 run resumed mid-stream is BIT-exact against the
+    uninterrupted run (the stochastic codes are keyed on (seed, round,
+    client), so the resumed tail replays identical quantizations)."""
+    ref = _cohort_resume_roundtrip(
+        tmp_path, compress="qsgd", compress_bits=4
+    )
+    # the residual column genuinely carries state (quantization error != 0)
+    store = ref.engine.store
+    assert store.residual_dim == ref.engine.dim
+    assert np.abs(store.residual).sum() > 0
+
+
+def test_resident_compressed_resume_matches_uninterrupted(tmp_path):
+    """The resident engine's ``compress_residual`` carry leaf survives the
+    EngineState checkpoint: a compressed run restored mid-scan reproduces
+    the uninterrupted trajectory."""
+    fed = fleet_fed(12, local_epochs=1, defense="foolsgold_sketch",
+                    compress="topk", compress_k=512)
+    engine = FedAREngine(small_model(16), fed, TaskRequirement())
+    data = _data()
+    ref, _ = engine.run(engine.init_state(), data, rounds=ROUNDS_TOTAL)
+    mid, _ = engine.run(engine.init_state(), data, rounds=ROUNDS_FIRST)
+    path = str(tmp_path / "compressed.ckpt")
+    ckpt.save(path, mid, step=ROUNDS_FIRST)
+    restored, _ = ckpt.restore(path, engine.init_state())
+    assert np.asarray(restored.compress_residual).shape == (12, engine.dim)
+    resumed, _ = engine.run(
+        restored, data, rounds=ROUNDS_TOTAL - ROUNDS_FIRST
+    )
+    _assert_states_match(ref, resumed, atol=1e-6)
 
 
 def test_restore_rejects_shape_mismatch(tmp_path):

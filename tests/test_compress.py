@@ -1,0 +1,257 @@
+"""Contract suite for the uplink compression subsystem (core/compress.py).
+
+Pins the properties the engine integration leans on: QSGD's decode is
+unbiased in expectation over keys, ``topk`` with ``k >= D`` and
+``compress="none"`` are exact identities, error feedback telescopes (the
+sum of decoded payloads plus the final residual equals the sum of raw
+deltas to fp32 tolerance), encoding is deterministic under a fixed key,
+and the all-zero / single-client edge cases behave.  Invalid-knob combos
+raise actionable ``ValueError``\\ s at construction.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common.config import FedConfig
+from repro.core.compress import client_keys, make_compression
+
+D = 96
+
+
+def _fed(**kw):
+    kw.setdefault("defense", "none")
+    return dataclasses.replace(FedConfig(), **kw)
+
+
+def _strategy(compress, dim=D, **kw):
+    return make_compression(_fed(compress=compress, **kw), dim)
+
+
+def _keys(seed, n):
+    return client_keys(jax.random.PRNGKey(seed), jnp.arange(n, dtype=jnp.int32))
+
+
+def _rows(seed, n, d=D, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+# ---------------------------------------------------------------- identities
+
+def test_none_is_exact_identity():
+    c = _strategy("none")
+    assert not c.active and c.residual_dim(D) == 0
+    deltas = _rows(0, 5)
+    res = jnp.zeros((5, 0))
+    payload, new_res = c.encode(deltas, jnp.zeros((5, D)), _keys(0, 5))
+    np.testing.assert_array_equal(np.asarray(c.decode(payload, D)),
+                                  np.asarray(deltas))
+    assert res.shape == (5, 0)
+
+
+def test_topk_k_equals_D_is_exact_identity():
+    c = _strategy("topk", compress_k=D)
+    deltas = _rows(1, 4)
+    dec, res, _ = c.roundtrip(deltas, jnp.zeros((4, D)),
+                              jnp.ones(4, bool), _keys(1, 4))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(deltas), atol=0)
+    np.testing.assert_allclose(np.asarray(res), 0.0, atol=0)
+
+
+# ------------------------------------------------------------ qsgd unbiased
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_decode_unbiased_over_keys(bits):
+    """E_key[decode(encode(v))] == v: average the decode of ONE row over
+    many independent keys; the stochastic-rounding mean error shrinks as
+    1/sqrt(K) (bits=4: per-coord sd <= scale/(2*7), K=4096 -> se ~1e-3)."""
+    c = _strategy("qsgd", compress_bits=bits)
+    row = _rows(2, 1)
+    K = 4096
+    reps = jnp.broadcast_to(row, (K, D))
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(7), i))(
+        jnp.arange(K)
+    )
+    payload, _ = c.encode(reps, jnp.zeros((K, D)), keys)
+    dec = np.asarray(c.decode(payload, D))
+    se = float(jnp.max(jnp.abs(row))) / (2 * (2 ** (bits - 1) - 1)) / np.sqrt(K)
+    np.testing.assert_allclose(dec.mean(axis=0), np.asarray(row)[0],
+                               atol=8 * se)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_decode_bounded_by_one_level(bits):
+    """Every decoded coordinate is within one quantization level of its
+    input (the deterministic guarantee underneath the unbiasedness)."""
+    c = _strategy("qsgd", compress_bits=bits)
+    v = _rows(3, 6)
+    payload, _ = c.encode(v, jnp.zeros_like(v), _keys(3, 6))
+    dec = np.asarray(c.decode(payload, D))
+    scale = np.max(np.abs(np.asarray(v)), axis=-1, keepdims=True)
+    level = scale / (2 ** (bits - 1) - 1)
+    assert np.all(np.abs(dec - np.asarray(v)) <= level + 1e-6)
+
+
+# -------------------------------------------------- error-feedback telescope
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mode=st.sampled_from(["qsgd4", "qsgd8", "topk"]),
+    n=st.integers(1, 6),
+    rounds=st.integers(1, 6),
+    seed=st.integers(0, 999),
+)
+def test_error_feedback_telescopes(mode, n, rounds, seed):
+    """sum_r decode(payload_r) + residual_final == sum_r delta_r: each
+    encode consumes delta + residual and the residual carries exactly what
+    the payload dropped, so compression error never accumulates."""
+    c = {
+        "qsgd4": lambda: _strategy("qsgd", compress_bits=4),
+        "qsgd8": lambda: _strategy("qsgd", compress_bits=8),
+        "topk": lambda: _strategy("topk", compress_k=7),
+    }[mode]()
+    res = jnp.zeros((n, D))
+    total_dec = jnp.zeros((n, D))
+    total_raw = jnp.zeros((n, D))
+    for r in range(rounds):
+        deltas = _rows(seed * 31 + r, n)
+        dec, res, _ = c.roundtrip(
+            deltas, res, jnp.ones(n, bool), _keys(seed + r, n)
+        )
+        total_dec = total_dec + dec
+        total_raw = total_raw + deltas
+    np.testing.assert_allclose(
+        np.asarray(total_dec + res), np.asarray(total_raw),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@pytest.mark.parametrize(
+    "kw", [dict(compress="qsgd", compress_bits=4),
+           dict(compress="qsgd", compress_bits=8),
+           dict(compress="topk", compress_k=7)],
+)
+def test_error_feedback_telescopes_deterministic(kw):
+    """Fixed-seed telescoping (runs even without hypothesis installed)."""
+    c = make_compression(_fed(**kw), D)
+    n, rounds = 5, 6
+    res = jnp.zeros((n, D))
+    total_dec = jnp.zeros((n, D))
+    total_raw = jnp.zeros((n, D))
+    for r in range(rounds):
+        deltas = _rows(100 + r, n)
+        dec, res, _ = c.roundtrip(
+            deltas, res, jnp.ones(n, bool), _keys(200 + r, n)
+        )
+        total_dec = total_dec + dec
+        total_raw = total_raw + deltas
+    np.testing.assert_allclose(
+        np.asarray(total_dec + res), np.asarray(total_raw),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_non_transmitting_rows_keep_residual_and_send_zero():
+    c = _strategy("topk", compress_k=5)
+    deltas = _rows(4, 4)
+    res0 = _rows(5, 4, scale=0.1)
+    transmit = jnp.array([True, False, True, False])
+    dec, res, _ = c.roundtrip(deltas, res0, transmit, _keys(4, 4))
+    np.testing.assert_allclose(np.asarray(dec)[1], 0.0, atol=0)
+    np.testing.assert_allclose(np.asarray(dec)[3], 0.0, atol=0)
+    np.testing.assert_array_equal(np.asarray(res)[1], np.asarray(res0)[1])
+    np.testing.assert_array_equal(np.asarray(res)[3], np.asarray(res0)[3])
+
+
+# ------------------------------------------------------------- determinism
+
+@pytest.mark.parametrize(
+    "kw", [dict(compress="qsgd", compress_bits=4),
+           dict(compress="qsgd", compress_bits=8),
+           dict(compress="topk", compress_k=9)],
+)
+def test_fixed_key_is_deterministic(kw):
+    c = make_compression(_fed(**kw), D)
+    deltas, res = _rows(6, 3), _rows(7, 3, scale=0.01)
+    out1 = c.roundtrip(deltas, res, jnp.ones(3, bool), _keys(11, 3))
+    out2 = c.roundtrip(deltas, res, jnp.ones(3, bool), _keys(11, 3))
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------- edge cases
+
+@pytest.mark.parametrize(
+    "kw", [dict(compress="qsgd", compress_bits=4),
+           dict(compress="qsgd", compress_bits=8),
+           dict(compress="topk", compress_k=3)],
+)
+def test_all_zero_rows_stay_exactly_zero(kw):
+    c = make_compression(_fed(**kw), D)
+    z = jnp.zeros((2, D))
+    dec, res, _ = c.roundtrip(z, z, jnp.ones(2, bool), _keys(0, 2))
+    np.testing.assert_array_equal(np.asarray(dec), 0.0)
+    np.testing.assert_array_equal(np.asarray(res), 0.0)
+
+
+def test_single_client_roundtrip():
+    c = _strategy("qsgd", compress_bits=8)
+    deltas = _rows(8, 1)
+    dec, res, payload = c.roundtrip(
+        deltas, jnp.zeros((1, D)), jnp.ones(1, bool), _keys(9, 1)
+    )
+    np.testing.assert_allclose(np.asarray(dec + res), np.asarray(deltas),
+                               atol=1e-6, rtol=1e-6)
+    assert payload["codes"].shape[0] == 1
+
+
+# -------------------------------------------------------- payload accounting
+
+def test_payload_nbytes_hits_nominal_ratios():
+    dense = _strategy("none").payload_nbytes(25450)
+    q8 = _strategy("qsgd", compress_bits=8).payload_nbytes(25450)
+    q4 = _strategy("qsgd", compress_bits=4).payload_nbytes(25450)
+    tk = _strategy("topk", compress_k=795, dim=25450).payload_nbytes(25450)
+    assert dense == 4 * 25450
+    assert q8 <= dense / 2  # acceptance: >= 2x reduction at 8 bits
+    assert q4 <= dense / 4  # >= 4x at 4 bits
+    assert tk == 8 * 795
+
+
+# ------------------------------------------------------- validation errors
+
+def test_unknown_compress_name_raises():
+    with pytest.raises(ValueError, match="unknown FedConfig.compress"):
+        make_compression(_fed(compress="gzip"), D)
+
+
+def test_bad_bits_raises():
+    with pytest.raises(ValueError, match="compress_bits"):
+        make_compression(_fed(compress="qsgd", compress_bits=3), D)
+
+
+@pytest.mark.parametrize("k", [0, -1, D + 1])
+def test_bad_k_raises(k):
+    with pytest.raises(ValueError, match="compress_k"):
+        make_compression(_fed(compress="topk", compress_k=k), D)
+
+
+@pytest.mark.parametrize("agg", ["async", "async_seq"])
+@pytest.mark.parametrize("compress", ["qsgd", "topk"])
+def test_async_combo_raises(agg, compress):
+    with pytest.raises(ValueError, match="does not compose"):
+        make_compression(_fed(compress=compress, aggregation=agg), D)
+
+
+def test_engine_construction_rejects_async_compress():
+    from repro.configs.fedar_mnist import fleet_fed, small_model
+    from repro.core.engine import FedAREngine
+    from repro.core.resources import TaskRequirement
+
+    fed = fleet_fed(12, aggregation="async", compress="qsgd",
+                    defense="none")
+    with pytest.raises(ValueError, match="does not compose"):
+        FedAREngine(small_model(16), fed, TaskRequirement())

@@ -167,6 +167,62 @@ def test_golden_gated_packed_fused_ragged_kernel():
     _assert_gated_golden(state)
 
 
+# --- qsgd-compressed trajectory: its own pinned checksums ----------------
+# Same table2 config as the default golden, with compress="qsgd" at 8 bits.
+# The default-path goldens above double as the compress="none" bit-identity
+# pin: FedConfig.compress defaults to "none", so any leakage of the
+# compression machinery into the uncompressed round body breaks THEM.
+QSGD_SUM = 69.01208786378629
+QSGD_L2 = 9.585405891872805
+QSGD_PROBES = np.array([
+    0.01865065097808838, -0.06364136189222336, 0.0508258081972599,
+    0.03253442049026489, 0.049707189202308655, 0.06594192236661911,
+    -0.1013520210981369, 0.05862641707062721,
+])
+QSGD_TRUST = np.array(
+    [90.0, 55.0, 55.0, 55.0, 90.0, 90.0, 90.0, 90.0, 50.0, 50.0, 90.0, 55.0]
+)
+QSGD_FG_L2 = 10.211340131551674
+QSGD_RESIDUAL_L2 = 0.09969845297580801
+
+
+def test_golden_qsgd_compressed():
+    """The qsgd-8 compressed engine is pinned on its own committed
+    checksums: the stochastic quantization stream is keyed off the round
+    key's domain-separated fold, so the trajectory (params, trust, defense
+    history AND the error-feedback residual) is reproducible bit-for-bit
+    across refactors."""
+    fed = fleet_fed(12, defense="foolsgold_sketch", compress="qsgd",
+                    compress_bits=8)
+    engine = FedAREngine(small_model(32), fed, TaskRequirement())
+    ds = make_federated("table2", 12, samples_per_client=60)
+    data = {k: jnp.asarray(v) for k, v in ds.arrays().items()}
+    state, _ = engine.run(engine.init_state(), data, rounds=ROUNDS)
+    p = np.asarray(state.params, np.float64)
+    assert p.size == GOLDEN_DIM
+    np.testing.assert_allclose(p.sum(), QSGD_SUM, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.linalg.norm(p), QSGD_L2, rtol=RTOL,
+                               atol=ATOL)
+    probes = p[:: p.size // 8][:8]
+    np.testing.assert_allclose(probes, QSGD_PROBES, rtol=RTOL, atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(state.trust.score), QSGD_TRUST)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(state.fg_history, np.float64)),
+        QSGD_FG_L2, rtol=RTOL, atol=ATOL,
+    )
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(state.compress_residual, np.float64)),
+        QSGD_RESIDUAL_L2, rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_golden_none_compression_carries_zero_width_residual():
+    """compress="none" must not widen the scan carry: the residual leaf is
+    (N, 0), so the uncompressed engine pays nothing for the subsystem."""
+    engine, state = _run()
+    assert np.asarray(state.compress_residual).shape == (12, 0)
+
+
 def test_golden_is_data_layer_independent_of_registry_path():
     """The registry builder and the raw ``table2_fleet`` constructor feed
     the engine bit-identical arrays — the golden pins BOTH entry points."""

@@ -39,8 +39,9 @@ def _data(n=N, samples=40):
     return _DATA_CACHE[(n, samples)]
 
 
-def _engines(aggregation, n=N, foolsgold=False, defense=None):
-    kw = dict(local_epochs=1, foolsgold=foolsgold, aggregation=aggregation)
+def _engines(aggregation, n=N, foolsgold=False, defense=None, **extra):
+    kw = dict(local_epochs=1, foolsgold=foolsgold, aggregation=aggregation,
+              **extra)
     if defense is not None:
         kw["defense"] = defense
     e1 = FedAREngine(small_model(32), fleet_fed(n, **kw), TaskRequirement())
@@ -120,6 +121,55 @@ def test_sharded_dense_defense_gathers_full_history():
     _, e8 = _engines("fedar", n=n, foolsgold=True)
     e8.run(e8.init_state(), _data(n=n), rounds=1)
     assert (n, e8.dim) in e8.comms.defense_gather_shapes
+
+
+@pytest.mark.parametrize(
+    "kw", [dict(compress="qsgd", compress_bits=8),
+           dict(compress="qsgd", compress_bits=4),
+           dict(compress="topk", compress_k=256)],
+)
+def test_sharded_compressed_matches_single_device(kw):
+    """Compressed runs match 1 vs 8 devices: quantization bits are keyed
+    on the CANONICAL client id, so the stochastic codes are identical
+    across shardings and only psum order (plus the rare code flip at an
+    fp32 ulp boundary, worth ~scale/L) separates the trajectories.  The
+    recorded uplink payload must be the packed wire format — shard-local
+    uint8 codes / (k,) pairs — never re-densified fp32."""
+    n = 64
+    e1, e8 = _engines("fedar", n=n, defense="foolsgold_sketch", **kw)
+    s1, o1 = e1.run(e1.init_state(), _data(n=n), rounds=ROUNDS)
+    s8, o8 = e8.run(e8.init_state(), _data(n=n), rounds=ROUNDS)
+    np.testing.assert_array_equal(np.asarray(o1.selected),
+                                  np.asarray(o8.selected))
+    np.testing.assert_array_equal(np.asarray(o1.on_time),
+                                  np.asarray(o8.on_time))
+    np.testing.assert_allclose(np.asarray(o1.trust), np.asarray(o8.trust),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1.params), np.asarray(s8.params),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1.compress_residual),
+                               np.asarray(s8.compress_residual),
+                               atol=1e-2, rtol=1e-2)
+    for comms, rows in ((e1.comms, n), (e8.comms, n // SHARDS)):
+        shapes = comms.uplink_payload_shapes
+        assert shapes, "compressed uplink never traced"
+        for leaves in shapes:
+            if kw["compress"] == "qsgd":
+                (cshape, cdtype), (sshape, sdtype) = leaves
+                assert cdtype == "uint8" and cshape[0] == rows
+                assert cshape[1] == -(-e8.dim * kw["compress_bits"] // 8)
+                assert sshape == (rows, 1) and sdtype == "float32"
+            else:
+                assert {s for s, _ in leaves} == {(rows, kw["compress_k"])}
+                assert {d for _, d in leaves} == {"int32", "float32"}
+
+
+def test_sharded_uncompressed_records_no_uplink():
+    """compress="none" never hits the payload instrumentation — the
+    uncompressed engine must not even trace the roundtrip."""
+    e1, e8 = _engines("fedar", n=64, defense="foolsgold_sketch")
+    e8.run(e8.init_state(), _data(n=64), rounds=1)
+    assert e8.comms.uplink_payload_shapes == []
 
 
 def test_sharded_server_api_unchanged():

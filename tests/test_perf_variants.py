@@ -169,3 +169,52 @@ def test_perf_gate_win_condition():
     fresh["gated_rounds_per_sec"]["128"]["packed_gated"] = 19.5
     violations, _ = win_condition(fresh)
     assert not violations
+
+
+def test_perf_gate_compress_win_condition():
+    """Every compress leaf with both byte counters is checked against its
+    mode's nominal payload fraction of dense; modes without a committed
+    bound and leaves missing a counter are skipped, not failed."""
+    from benchmarks.perf_gate import compress_win_condition
+
+    dense = 4 * 25450
+    fresh = {"compress_rounds_per_sec": {"128": {
+        "none": {"rounds_per_sec": 10.0, "payload_bytes_per_client": dense,
+                 "dense_bytes_per_client": dense},
+        "qsgd8": {"rounds_per_sec": 9.0,
+                  "payload_bytes_per_client": 25450 + 4,
+                  "dense_bytes_per_client": dense},
+        "qsgd4": {"rounds_per_sec": 9.0,
+                  "payload_bytes_per_client": 12725 + 4,
+                  "dense_bytes_per_client": dense},
+        "topk": {"rounds_per_sec": 9.0, "payload_bytes_per_client": 8 * 795,
+                 "dense_bytes_per_client": dense},
+        "exotic": {"rounds_per_sec": 9.0,  # no committed bound -> skipped
+                   "payload_bytes_per_client": dense,
+                   "dense_bytes_per_client": dense},
+        "partial": {"rounds_per_sec": 9.0},  # counters absent -> skipped
+    }}}
+    violations, checked = compress_win_condition(fresh)
+    assert checked == 4 and not violations
+    # a packing regression that fattens qsgd-4 past 1/4 of dense trips it
+    fresh["compress_rounds_per_sec"]["128"]["qsgd4"][
+        "payload_bytes_per_client"] = dense // 2
+    violations, checked = compress_win_condition(fresh)
+    assert checked == 4
+    assert [(f, m) for f, m, _, _ in violations] == [("128", "qsgd4")]
+    _, mode, payload, bound = violations[0]
+    assert payload == dense // 2 and bound == 0.25 * dense
+
+
+def test_perf_gate_iter_axes_covers_compress():
+    """The regression comparison walks the compress axis's rounds/sec
+    leaves like any other (the byte counters stay out of the rps walk)."""
+    from benchmarks.perf_gate import iter_axes
+
+    payload = {"compress_rounds_per_sec": {"128": {
+        "qsgd8": {"rounds_per_sec": 9.0, "payload_bytes_per_client": 1,
+                  "dense_bytes_per_client": 2},
+    }}}
+    assert dict(iter_axes(payload)) == {
+        "compress_rounds_per_sec/128/qsgd8": 9.0
+    }
