@@ -43,6 +43,10 @@ The ``compress`` axis prices the uplink-compression modes (qsgd 8/4-bit
 stochastic quantization, magnitude top-k, vs the dense baseline) inside
 the same jitted scan, recording payload bytes/client next to the dense
 4*D so the gate can enforce the nominal compression ratios intra-run.
+The ``faults`` axis prices the chaos fault schedule (seeded per-round
+draw + corrupt-row rewrite + non-finite quarantine) against the
+fault-free engine at the same config — an intra-run pair the gate bounds
+at <= 10% overhead.
 
 Run:  PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
                                                        [--devices 1,8]
@@ -100,6 +104,14 @@ COMPRESS_MODES = (
     ("qsgd8", dict(compress="qsgd", compress_bits=8)),
     ("qsgd4", dict(compress="qsgd", compress_bits=4)),
     ("topk", dict(compress="topk")),  # compress_k=None -> D // 32
+)
+FAULT_SIZES = (128,)
+# the chaos schedule vs the fault-free engine on the SAME config: the
+# per-round fault draw + quarantine run inside the jitted scan, and the
+# perf gate's faults win condition bounds their overhead at 10% intra-run
+FAULT_MODES = (
+    ("none", {}),
+    ("chaos", dict(faults="chaos")),
 )
 SAMPLES = 20  # one local batch per client per round keeps dispatch dominant
 QUICK_REPEATS = 3  # repeat-median absorbs CI runner jitter
@@ -360,6 +372,22 @@ def bench_compress(quick: bool = False) -> dict:
     return out
 
 
+def bench_faults(quick: bool = False) -> dict:
+    """rounds/sec of the scan engine with the chaos fault schedule vs the
+    fault-free engine at the same config: the seeded per-round draw, the
+    corrupt-row rewrite and the always-on non-finite quarantine all ride
+    inside the jitted scan, so their cost is one intra-run pair the perf
+    gate bounds (chaos >= 0.9 * none)."""
+    out = {}
+    for n in FAULT_SIZES:
+        out[str(n)] = {}
+        for mode, kw in FAULT_MODES:
+            engine, data = _make(n, **kw)
+            out[str(n)][mode] = _time_scan(engine, data, rounds=4,
+                                           repeats=_repeats(quick))
+    return out
+
+
 def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
     """rounds/sec of the scan engine per host device count: one worker
     process per count so the XLA device flag precedes jax init."""
@@ -386,7 +414,7 @@ def bench_devices(quick: bool = False, counts=DEVICE_COUNTS) -> dict:
 
 def write_json(summary, devices=None, defense=None, scenario=None,
                gated=None, model_family=None, cohort=None, compress=None,
-               path: str = "BENCH_engine.json") -> None:
+               faults=None, path: str = "BENCH_engine.json") -> None:
     payload = {"rounds_per_sec": summary}
     if devices is not None:
         payload["sharded_rounds_per_sec_by_devices"] = devices
@@ -402,6 +430,8 @@ def write_json(summary, devices=None, defense=None, scenario=None,
         payload["cohort_rounds_per_sec"] = cohort
     if compress is not None:
         payload["compress_rounds_per_sec"] = compress
+    if faults is not None:
+        payload["faults_rounds_per_sec"] = faults
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -440,8 +470,9 @@ def main() -> None:
     family = bench_model_family(quick=quick)
     cohort = bench_cohort(quick=quick)
     compress = bench_compress(quick=quick)
+    faults = bench_faults(quick=quick)
     write_json(summary, devices, defense, scenario, gated, family, cohort,
-               compress)
+               compress, faults)
     for k, per_n in devices.items():
         for n, v in per_n.items():
             rows.append((f"engine_scan_N{n}_dev{k}", round(1e6 / _rps(v), 1),
@@ -469,6 +500,10 @@ def main() -> None:
     for n, per_c in compress.items():
         for mode, v in per_c.items():
             rows.append((f"engine_scan_N{n}_compress_{mode}",
+                         round(1e6 / _rps(v), 1), round(_rps(v), 2)))
+    for n, per_f in faults.items():
+        for mode, v in per_f.items():
+            rows.append((f"engine_scan_N{n}_faults_{mode}",
                          round(1e6 / _rps(v), 1), round(_rps(v), 2)))
     print("name,us_per_round,rounds_per_sec_or_speedup")
     for name, us, derived in rows:

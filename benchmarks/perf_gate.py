@@ -55,6 +55,13 @@ nominal ratios — qsgd-8 at most 1/2 of dense, qsgd-4 at most 1/4, topk
 at most 1/2 — so a packing change that silently fattens the encoded
 uplink fails CI even though rounds/sec look fine.  Byte accounting is
 exact (no timer jitter), so no slack applies.
+
+A fourth intra-run invariant covers fault injection
+(``faults_rounds_per_sec``): each fault-schedule leaf ran in the same
+process as the same-config ``none`` leaf, and must keep at least
+``(1 - FAULT_SLACK - WIN_SLACK)`` of its throughput — the chaos
+machinery (seeded draw, corrupt-row rewrite, non-finite quarantine) is
+bounded at 10% overhead on the jitted round body.
 """
 from __future__ import annotations
 
@@ -100,7 +107,7 @@ def iter_axes(payload: dict) -> Iterator[Tuple[str, float]]:
     for axis in ("sharded_rounds_per_sec_by_devices", "defense_rounds_per_sec",
                  "scenario_rounds_per_sec", "gated_rounds_per_sec",
                  "model_family_rounds_per_sec", "cohort_rounds_per_sec",
-                 "compress_rounds_per_sec"):
+                 "compress_rounds_per_sec", "faults_rounds_per_sec"):
         for outer, inner in payload.get(axis, {}).items():
             if not isinstance(inner, dict):
                 continue
@@ -237,6 +244,39 @@ def compress_win_condition(fresh: dict):
     return violations, checked
 
 
+# fault-injection overhead bound: the chaos leaf ran in the same process as
+# the same-config fault-free leaf, and the seeded draw + corrupt rewrite +
+# quarantine must stay within 10% of it (plus the usual timer slack).
+FAULT_SLACK = 0.10
+
+
+def faults_win_condition(fresh: dict, slack: float = FAULT_SLACK):
+    """Fault-overhead bound, intra-run like the others: within every
+    ``faults_rounds_per_sec`` fleet entry that carries both the ``none``
+    and a fault-schedule leaf, each schedule must keep at least
+    ``(1 - slack - WIN_SLACK)`` of the fault-free throughput — the draw is
+    O(N) coins plus an (N, D) where/isfinite pass inside the jitted scan,
+    and past 10% it is eating the round body.  Returns
+    (violations, checked)."""
+    violations, checked = [], 0
+    for fleet, inner in fresh.get("faults_rounds_per_sec", {}).items():
+        if not isinstance(inner, dict):
+            continue
+        ceiling = _rps(inner.get("none"))
+        if ceiling is None:
+            continue
+        for leaf, entry in inner.items():
+            if leaf == "none":
+                continue
+            val = _rps(entry)
+            if val is None:
+                continue
+            checked += 1
+            if val < (1.0 - slack - WIN_SLACK) * ceiling:
+                violations.append((fleet, leaf, val, "none", ceiling))
+    return violations, checked
+
+
 def main() -> int:
     argv = sys.argv[1:]
     tol = DEFAULT_TOLERANCE
@@ -272,6 +312,10 @@ def main() -> int:
     compress_wins, compress_checked = compress_win_condition(fresh)
     print(f"perf gate: {compress_checked} compress payload bounds checked "
           f"(intra-run byte accounting, exact)")
+    fault_wins, fault_checked = faults_win_condition(fresh)
+    print(f"perf gate: {fault_checked} fault-overhead bounds checked "
+          f"(intra-run, {FAULT_SLACK:.0%} overhead + {WIN_SLACK:.0%} timer "
+          f"slack)")
     rc = 0
     if failures:
         print("REGRESSIONS (fresh < (1 - tol) * baseline):")
@@ -298,6 +342,14 @@ def main() -> int:
         for fleet, mode, payload, bound in compress_wins:
             print(f"  compress_rounds_per_sec/{fleet}: {mode} "
                   f"{payload:.0f} bytes/client > bound {bound:.0f}")
+        rc = 1
+    if fault_wins:
+        print("FAULT-INJECTION TAX (chaos round slower than the 10% bound "
+              "over the same-config fault-free round):")
+        for fleet, mode, v, _, d in fault_wins:
+            print(f"  faults_rounds_per_sec/{fleet}: {mode} {v:.2f} < "
+                  f"(1 - {FAULT_SLACK + WIN_SLACK:.0%}) * none {d:.2f} "
+                  f"rounds/sec")
         rc = 1
     if rc == 0:
         print("perf gate: OK")

@@ -52,6 +52,16 @@ def main():
     ap.add_argument("--compress_k", type=int, default=None,
                     help="topk coordinates kept per client "
                          "(default: model_dim // 32)")
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "crash", "corrupt", "battery",
+                             "flaky", "chaos"],
+                    help="deterministic fault injection (core/faults.py) "
+                         "layered on top of the poisoning attack; both "
+                         "runs inject the identical schedule, so the "
+                         "defended-vs-undefended gap isolates the defense")
+    ap.add_argument("--fault_rate", type=float, default=None,
+                    help="override the per-round crash AND corrupt-emission "
+                         "probabilities of the chosen fault schedule")
     ap.add_argument("--cache_dir", default=None,
                     help="IDX cache dir for mnist/emnist (default: "
                          "$FEDAR_DATA_DIR or ~/.cache/fedar)")
@@ -100,13 +110,17 @@ def main():
     compress_kw = dict(compress=args.compress,
                        compress_bits=args.compress_bits,
                        compress_k=args.compress_k)
+    faults_kw = dict(faults=args.faults)
+    if args.fault_rate is not None:
+        faults_kw.update(fault_crash_rate=args.fault_rate,
+                         fault_corrupt_rate=args.fault_rate)
 
     def run(defense: str):
         if paper_scale:
             fed = fleet_fed(
                 12, local_epochs=3, timeout=30.0, defense=defense,
                 deviation_gamma=2.5 if defense != "none" else 1e9,
-                mesh_shape=mesh, **compress_kw,
+                mesh_shape=mesh, **compress_kw, **faults_kw,
             )
             data = table2_fleet(samples_per_client=args.samples,
                                 flip_frac=0.8, source=source)
@@ -118,7 +132,7 @@ def main():
                 args.clients, local_epochs=2, defense=defense,
                 num_poisoners=n_syb, num_starved=0, client_fraction=1.0,
                 deviation_gamma=1e9,  # isolate the similarity defense
-                mesh_shape=mesh, **compress_kw,
+                mesh_shape=mesh, **compress_kw, **faults_kw,
             )
             data, sybils = sybil_fleet(args.clients, n_syb,
                                        samples_per_client=args.samples,

@@ -17,10 +17,19 @@ The engine picks the client-data layout — rectangular pad-to-max vs the
 bucketed packed layout — per fleet from its padding-waste estimate;
 ``--no-packed`` / ``--packed`` force it (numerics identical either way).
 
+``--faults chaos`` turns on the deterministic fault-injection schedule
+(mid-round crashes, garbage uplinks, battery death, flapping links); the
+engine's non-finite quarantine keeps the global model finite with faulty
+rows contributing exactly-zero aggregation weight.
+
 Run:  PYTHONPATH=src python examples/quickstart.py [--clients 128]
       PYTHONPATH=src python examples/quickstart.py --clients 128 --devices 8
       PYTHONPATH=src python examples/quickstart.py --clients 512 --devices 8 \
           --dataset emnist --scenario label_skew
+      PYTHONPATH=src python examples/quickstart.py --clients 64 --rounds 5 \
+          --faults chaos
+      PYTHONPATH=src python examples/quickstart.py --clients 100000 \
+          --cohort 256 --aggregation async --compress qsgd --faults chaos
 """
 import argparse
 import os
@@ -82,6 +91,25 @@ def main():
     ap.add_argument("--compress_k", type=int, default=None,
                     help="topk coordinates kept per client "
                          "(default: model_dim // 32)")
+    ap.add_argument("--aggregation", default="fedar",
+                    choices=["fedar", "fedavg", "async"],
+                    help="aggregation rule: the paper's straggler-masked "
+                         "fedar, plain fedavg, or buffered async (late "
+                         "uplinks land in a pending buffer and merge next "
+                         "round; composes with --cohort via the "
+                         "store-resident delta table)")
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "crash", "corrupt", "battery",
+                             "flaky", "chaos"],
+                    help="deterministic fault injection (core/faults.py): "
+                         "mid-round crashes, garbage uplinks, battery-death "
+                         "windows, flapping connectivity, or all four "
+                         "(chaos).  Keyed on (seed, round, client id), so "
+                         "any --devices count injects identical faults")
+    ap.add_argument("--fault_rate", type=float, default=None,
+                    help="override the per-round crash AND corrupt-emission "
+                         "probabilities of the chosen fault schedule "
+                         "(defaults: crash 0.1, corrupt 0.5)")
     ap.add_argument("--alpha", type=float, default=None,
                     help="Dirichlet concentration for the skew scenarios; "
                          "default 0.5")
@@ -180,8 +208,13 @@ def main():
     if cohort_mode and args.devices > 1 and cohort % args.devices:
         ap.error(f"--cohort {cohort} must divide by --devices "
                  f"{args.devices} (the cohort is what shards)")
+    faults_kw = dict(faults=args.faults)
+    if args.fault_rate is not None:
+        faults_kw.update(fault_crash_rate=args.fault_rate,
+                         fault_corrupt_rate=args.fault_rate)
     fed = fleet_fed(ds.num_clients, local_epochs=5, local_batch_size=20,
                     timeout=10.0,
+                    aggregation=args.aggregation,
                     defense="foolsgold_sketch" if cohort_mode
                     else "foolsgold" if args.clients == 12
                     else "foolsgold_sketch",
@@ -190,7 +223,12 @@ def main():
                     compress=args.compress,
                     compress_bits=args.compress_bits,
                     compress_k=args.compress_k,
-                    mesh_shape=args.devices if args.devices > 1 else None)
+                    mesh_shape=args.devices if args.devices > 1 else None,
+                    **faults_kw)
+    if args.faults != "none":
+        print(f"[faults] schedule={args.faults}: non-finite quarantine "
+              f"armed (cap {fed.resolved_quarantine_cap:g}); faulty rows "
+              "aggregate with exactly-zero weight")
     server = FedARServer(MnistConfig(), fed, TaskRequirement())
     if args.compress != "none":
         payload = server.engine.compression.payload_nbytes(server.engine.dim)

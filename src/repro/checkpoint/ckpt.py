@@ -50,7 +50,14 @@ def restore(path: str, template: Any, *, shardings: Optional[Any] = None):
     )
     out = []
     for n, tmpl, sh in zip(names, leaves, shard_leaves):
-        rec = payload["records"][n]
+        rec = payload["records"].get(n)
+        if rec is None:
+            raise ValueError(
+                f"checkpoint {path!r} has no record for {n!r} — the file "
+                f"was written by a template without that leaf (e.g. a "
+                f"store saved before the column existed); re-save it with "
+                f"the current template"
+            )
         import ml_dtypes  # bfloat16 et al. live here, not in numpy
 
         dt = np.dtype(getattr(ml_dtypes, rec["dtype"], rec["dtype"]))

@@ -263,6 +263,29 @@ class FedConfig:
     # pack/unpack backend: auto (Pallas kernel on TPU, einsum elsewhere) |
     # kernel | einsum — mirrors ``agg_impl``/``defense_impl``
     compress_impl: str = "auto"
+    # --- fault injection + quarantine (core/faults.py) ---
+    # faults: named deterministic fault schedule, keyed on (seed, round,
+    # canonical client id) so 1-vs-8-device runs inject identical faults.
+    #   "none"    -- no injection, bit-identical to the fault-free engine
+    #   "crash"   -- mid-round client crashes (uplink lost, battery burned)
+    #   "corrupt" -- NaN/Inf/garbage rows after local SGD, before decode
+    #   "battery" -- periodic battery-death windows feeding CheckResource
+    #   "flaky"   -- flapping connectivity (multi-round offline windows)
+    #   "chaos"   -- all of the above at once (the soak-test schedule)
+    faults: str = "none"
+    fault_crash_rate: float = 0.1  # P(selected client crashes mid-round)
+    fault_corrupt_frac: float = 0.25  # fraction of clients that CAN corrupt
+    fault_corrupt_rate: float = 0.5  # per-round P(corruptor emits garbage)
+    fault_battery_frac: float = 0.25  # fraction with battery-death windows
+    fault_battery_rounds: int = 8  # dead-window length (period is 4x)
+    fault_flap_frac: float = 0.25  # fraction with flapping connectivity
+    fault_flap_period: int = 8  # rounds per flap cycle
+    fault_flap_rounds: int = 3  # offline rounds per cycle
+    # non-finite quarantine magnitude cap: rows whose max |coord| exceeds it
+    # are quarantined like NaN/Inf rows (exact-zero weight + trust penalty).
+    # None -> isfinite-only guard when faults are off, 1e6 when a fault
+    # schedule is active (see resolved_quarantine_cap).
+    quarantine_cap: Optional[float] = None
     # cluster-aware knobs: soft cluster mass m_i = 1 + sum_j relu(cs_ij)^power;
     # clients keep full weight while m_i <= slack * median(m), larger
     # (sybil-sized) clusters decay as (slack*median/m)^sharpness
@@ -287,6 +310,18 @@ class FedConfig:
         if self.defense is not None:
             return self.defense
         return "foolsgold" if self.foolsgold else "none"
+
+    @property
+    def resolved_quarantine_cap(self) -> Optional[float]:
+        """Magnitude cap for the non-finite quarantine row guard.
+
+        An explicit ``quarantine_cap`` always wins.  Otherwise a default
+        1e6 cap turns on with any active fault schedule (garbage rows can
+        be huge-but-finite); the fault-free engine keeps the isfinite-only
+        guard so legitimate large deltas are never touched."""
+        if self.quarantine_cap is not None:
+            return self.quarantine_cap
+        return 1e6 if self.faults != "none" else None
 
 
 @dataclass(frozen=True)

@@ -51,6 +51,11 @@ _COLUMNS = (
     "score", "participations", "failures",
     "memory", "bandwidth", "battery", "compute",
     "history", "residual", "last_selected",
+    # store-resident async buffer (aggregation="async" in cohort mode):
+    # the in-flight delta + its weight/issue/arrival tags follow the
+    # client on and off the device (zero-width when async is off)
+    "pending_delta", "pending_weight", "pending_issued",
+    "pending_arrival", "pending_valid",
 )
 
 
@@ -58,7 +63,8 @@ class ClientStore:
     """Numpy-backed per-client table; O(N * smallstate) host memory."""
 
     def __init__(self, fed: FedConfig, history_dim: int, *,
-                 residual_dim: int = 0, num_shards: int = 1):
+                 residual_dim: int = 0, pending_dim: int = 0,
+                 num_shards: int = 1):
         n = fed.num_clients
         if num_shards < 1 or n % num_shards:
             raise ValueError(
@@ -87,6 +93,14 @@ class ClientStore:
         # cohort engine runs uncompressed
         self.residual = np.zeros((n, residual_dim), np.float32)
         self.last_selected = np.full(n, -1, np.int32)
+        # store-resident buffered-async slots (width 0 unless the cohort
+        # engine runs aggregation="async"): the resident engine's
+        # EngineState.pending_* leaves, host-side
+        self.pending_delta = np.zeros((n, pending_dim), np.float32)
+        self.pending_weight = np.zeros(n, np.float32)
+        self.pending_issued = np.zeros(n, np.int32)
+        self.pending_arrival = np.zeros(n, np.int32)
+        self.pending_valid = np.zeros(n, bool)
         # 0-d array (not a python int) so the ckpt pytree flattens it
         self.round_idx = np.zeros((), np.int32)
 
@@ -102,6 +116,10 @@ class ClientStore:
     @property
     def residual_dim(self) -> int:
         return self.residual.shape[1]
+
+    @property
+    def pending_dim(self) -> int:
+        return self.pending_delta.shape[1]
 
     def block(self, shard: int) -> dict:
         """Shard ``shard``'s contiguous column views (zero-copy): clients
@@ -138,13 +156,20 @@ class ClientStore:
             "compute": self.compute[idx],
             "history": self.history[idx],
             "residual": self.residual[idx],
+            "pending_delta": self.pending_delta[idx],
+            "pending_weight": self.pending_weight[idx],
+            "pending_issued": self.pending_issued[idx],
+            "pending_arrival": self.pending_arrival[idx],
+            "pending_valid": self.pending_valid[idx],
         }
 
     def scatter_round(self, idx, valid, *, trust: TrustState, battery,
-                      history, residual=None) -> None:
+                      history, residual=None, pending=None) -> None:
         """Write the round's device results back into the table — only the
         ``valid`` cohort slots land (underfill slots carry garbage rows
-        gathered from client 0 and must never scatter)."""
+        gathered from client 0 and must never scatter).  ``pending`` is the
+        optional dict of post-round async buffer columns (keys named like
+        the store columns)."""
         idx = np.asarray(idx)[np.asarray(valid, bool)]
         keep = np.asarray(valid, bool)
         self.score[idx] = np.asarray(trust.score)[keep]
@@ -155,6 +180,11 @@ class ClientStore:
             self.history[idx] = np.asarray(history)[keep]
         if self.residual_dim and residual is not None:
             self.residual[idx] = np.asarray(residual)[keep]
+        if self.pending_dim and pending is not None:
+            for name in ("pending_delta", "pending_weight",
+                         "pending_issued", "pending_arrival",
+                         "pending_valid"):
+                getattr(self, name)[idx] = np.asarray(pending[name])[keep]
 
     def finish_round(self, idx, valid, eligible) -> None:
         """Host-side evolution of the NON-cohort population, mirroring the
@@ -183,6 +213,13 @@ class ClientStore:
 
     def load_state_dict(self, state: dict) -> None:
         for name in _COLUMNS:
+            if name not in state:
+                raise ValueError(
+                    f"store checkpoint is missing column {name!r} — it was "
+                    f"written by an older build without that column; "
+                    f"re-save the store (or restore with the build that "
+                    f"wrote it)"
+                )
             arr = np.asarray(state[name])
             if arr.shape != getattr(self, name).shape:
                 raise ValueError(

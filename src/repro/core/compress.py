@@ -227,13 +227,14 @@ def make_compression(fed: FedConfig, model_dim: int) -> CompressionStrategy:
         ) from None
     if cls is NoCompression:
         return NoCompression()
-    if fed.aggregation in ("async", "async_seq"):
+    if fed.aggregation == "async_seq":
         raise ValueError(
             f"FedConfig.compress={fed.compress!r} does not compose with "
-            f"aggregation={fed.aggregation!r}: the buffered modes carry raw "
-            "per-client deltas across rounds, so the error-feedback residual "
-            "would double-count late arrivals — use aggregation='fedar' or "
-            "'fedavg', or compress='none'"
+            "aggregation='async_seq': the sequential fold aggregates full "
+            "local MODELS, never the decoded deltas, so the error-feedback "
+            "residual would silently drift from what lands in the global "
+            "model — use aggregation='async' (the buffered mode transmits "
+            "exactly when its slot can admit) or compress='none'"
         )
     return cls(fed, model_dim)
 

@@ -81,6 +81,7 @@ from repro.core import aggregation as agg
 from repro.core.compress import client_keys as compress_keys
 from repro.core.compress import make_compression
 from repro.core.defense import make_defense
+from repro.core.faults import make_faults
 from repro.core.distributed import (
     ClientComms,
     MeshComms,
@@ -206,6 +207,7 @@ class FedAREngine:
         self.dim = flatten(self.template).shape[0]
         self.defense = make_defense(fed, self.dim)
         self.compression = make_compression(fed, self.dim)
+        self.faults = make_faults(fed)
         self.resources0, self.poison_mask = make_fleet(
             fed.num_clients,
             num_starved=fed.num_starved,
@@ -621,6 +623,17 @@ class FedAREngine:
         key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), state.round_idx)
         k_sel, k_lat, _k_poi = jax.random.split(key, 3)
 
+        # --- fault injection (core/faults.py): this round's realization,
+        # keyed on (seed, round, canonical client id) via a domain-
+        # separated fold of the round key — the pinned 3-way split above
+        # never moves, and faults="none" draws nothing at all
+        fdraw = None
+        if self.faults.active:
+            fdraw = self.faults.draw(
+                key, jnp.arange(fed.num_clients, dtype=jnp.int32),
+                state.round_idx,
+            )
+
         # --- Algorithm 2 lines 6-10: CheckResource + trust sort + sample
         # (global (N,) math, replicated across shards).  In cohort mode
         # (FedConfig.cohort_size) selection already ran HOST-side over the
@@ -629,9 +642,21 @@ class FedAREngine:
         # slots (underfill slots are inert: all-False mask, zero weight).
         if "cohort_valid" in data:
             selected = ok = data["cohort_valid"]
+            if fdraw is not None:
+                # flapping / battery-dead clients fail CheckResource even
+                # though the host sampled them before the fault draw
+                selected = ok = selected & ~fdraw.unavailable
         else:
+            res_sel = state.resources
+            if fdraw is not None:
+                # an offline window reads as a dead battery to
+                # CheckResource; the persistent battery column is untouched
+                res_sel = res_sel._replace(
+                    battery=jnp.where(fdraw.unavailable, 0.0,
+                                      res_sel.battery)
+                )
             selected, ok = select_clients(
-                k_sel, state.trust, state.resources, self.req, fed
+                k_sel, state.trust, res_sel, self.req, fed
             )
 
         g_flat = state.params
@@ -675,6 +700,14 @@ class FedAREngine:
         # cohort rows (the rest are exact zeros), so with the defense off
         # XLA drops the canonical expansion from the gated hot path
         delta_c = None if locals_c is None else locals_c - g_flat[None, :]
+        crashed = None
+        if fdraw is not None:
+            # mid-round crash: the client trained (battery burns below) but
+            # its uplink never reaches the server this round
+            crashed = selected & fdraw.crash
+            # corruption and quarantine rewrite canonical rows, so the
+            # compact gated shortcut is invalid under an active schedule
+            delta_c = cohort = None
 
         # --- virtual time: latency per client, straggler = late vs timeout
         model_bytes = self.dim * 4.0
@@ -687,6 +720,19 @@ class FedAREngine:
         if force_straggler is not None:
             lat = jnp.where(jnp.asarray(force_straggler), fed.timeout * 3.0, lat)
         on_time = lat <= fed.timeout
+        if crashed is not None:
+            # crash-aware straggler masking: a crashed client reads as a
+            # missed deadline (trust failure band), never as an arrival
+            on_time = on_time & ~crashed
+        # the rows the server can ever receive this round (== selected on
+        # the fault-free path, so every mask below is bit-identical there)
+        uplinked = selected if crashed is None else selected & ~crashed
+        # rows actually visible server-side per mode: fedavg waits for
+        # stragglers and async buffers them; fedar/async_seq skip on timeout
+        if fed.aggregation in ("fedavg", "async"):
+            seen = uplinked
+        else:
+            seen = uplinked & on_time
 
         # --- uplink compression (core/compress.py): transmitting clients
         # send the encoded payload; the server decodes it and everything
@@ -694,14 +740,22 @@ class FedAREngine:
         # consumes the DECODED rows.  Non-transmitting clients contribute
         # exact zeros and keep their error-feedback residual untouched.
         residual = state.compress_residual
+        deltas_raw = transmit_g = None
         if self.compression.active:
-            # fedavg waits for stragglers, so they transmit too; fedar's
-            # timeout-skipped clients never upload (async modes are
-            # rejected at construction)
-            transmit = comms.local(
-                selected if fed.aggregation == "fedavg"
-                else selected & on_time
-            )
+            # per-mode transmit window: fedavg waits for stragglers, so
+            # they transmit too; fedar's timeout-skipped clients never
+            # upload; async transmits exactly when the buffer has a slot to
+            # admit into (a free slot or an on-time supersede — the
+            # client-side-knowable superset of _buffered_async's admit
+            # gate, so error feedback is consumed iff the row can land)
+            if fed.aggregation == "fedavg":
+                transmit_g = uplinked
+            elif fed.aggregation == "async":
+                lag0 = jnp.floor(lat / fed.timeout).astype(jnp.int32) == 0
+                transmit_g = uplinked & (lag0 | ~state.pending_valid)
+            else:
+                transmit_g = uplinked & on_time
+            transmit = comms.local(transmit_g)
             # the gated compact view is a compute shortcut; post-decode the
             # canonical rows are what every downstream op must see
             delta_c = cohort = None
@@ -712,27 +766,81 @@ class FedAREngine:
                 jax.random.fold_in(key, _COMPRESS_KEY_FOLD),
                 comms.local(jnp.arange(fed.num_clients, dtype=jnp.int32)),
             )
+            deltas_raw = deltas
             deltas, residual, payload = self.compression.roundtrip(
                 deltas, residual, transmit, keys
             )
             comms.record_uplink(payload)
 
+        # --- corrupt-uplink injection: garbage replaces the row the server
+        # RECEIVES (post-decode, pre-quarantine) — exactly what a flipped
+        # bit or truncated payload on the wire would produce
+        if fdraw is not None:
+            corrupt_g = fdraw.corrupt & (
+                transmit_g if transmit_g is not None else seen
+            )
+            c_loc = comms.local(corrupt_g)[:, None]
+            deltas = jnp.where(c_loc, comms.local(fdraw.fill)[:, None],
+                               deltas)
+
+        # --- non-finite quarantine at the decode boundary (ALWAYS on): a
+        # NaN/Inf — or, past the configured magnitude cap, any garbage —
+        # row contributes exact zeros instead of riding the scan carry
+        # into the global model.  With finite rows every where() below is
+        # an identity, so the fault-free path stays bit-identical.
+        # one fused (N_loc, D) pass: the magnitude test rides the same
+        # reduction as the finiteness test (a second max-abs reduction cost
+        # ~13% of the round at N=128 — the fault win condition's budget)
+        row_ok = jnp.isfinite(deltas)
+        cap = fed.resolved_quarantine_cap
+        if cap is not None:
+            row_ok = row_ok & (jnp.abs(deltas) <= cap)
+        q_loc = ~jnp.all(row_ok, axis=-1)
+        deltas = jnp.where(q_loc[:, None], 0.0, deltas)
+        if cohort is not None:
+            delta_c = jnp.where(q_loc[cohort[0]][:, None], 0.0, delta_c)
+        if self.compression.active:
+            # dropped-uplink retry: a quarantined transmission consumed its
+            # error-feedback residual for nothing — put the FULL raw value
+            # (delta + pre-round residual) back in the residual so the next
+            # transmission carries it (PR 9's telescoping invariant extends
+            # to faults).  A non-finite raw value is unrecoverable; fall
+            # back to the pre-round residual so the carry is never poisoned.
+            v = deltas_raw + state.compress_residual
+            v_el = jnp.isfinite(v)
+            if cap is not None:
+                v_el = v_el & (jnp.abs(v) <= cap)
+            v_ok = jnp.all(v_el, axis=-1)
+            retry = q_loc & comms.local(transmit_g)
+            residual = jnp.where(
+                retry[:, None],
+                jnp.where(v_ok[:, None], v, state.compress_residual),
+                residual,
+            )
+        quarantined = comms.all_gather(q_loc)  # (N,) replicated
+
         # --- line 11: deviation ban + robust-defense weights
         if fed.aggregation == "async":
-            # no-wait: every participant's update eventually lands, so
-            # screen all of them
-            active = selected
+            # no-wait: every (non-crashed) participant's update eventually
+            # lands, so screen all of them
+            active = uplinked
         else:
             active = selected & on_time
+        # quarantined rows are zeroed — keep them out of the deviation
+        # statistics (a zero row would drag the population mean) and brand
+        # them deviated instead: exact-zero aggregation weight plus the
+        # trust ban, the same fate as a caught poisoner
+        screen = active & ~quarantined
         if cohort is None:
             deviated = agg.deviation_mask(
-                deltas, active, fed.deviation_gamma, comms=comms
+                deltas, screen, fed.deviation_gamma, comms=comms
             )
         else:
             deviated = agg.deviation_mask(
-                delta_c, active, fed.deviation_gamma, comms=comms,
+                delta_c, screen, fed.deviation_gamma, comms=comms,
                 cohort=cohort,
             )
+        deviated = deviated | (seen & quarantined)
         contributing = active & ~deviated
         weights = data["sizes"].astype(jnp.float32)
         # pluggable defense (core/defense.py): the strategy owns its carried
@@ -754,13 +862,14 @@ class FedAREngine:
         )
         agg_rows = deltas if cohort is None else delta_c
         if fed.aggregation == "fedavg":
-            # synchronous: waits for everyone selected (incl. stragglers)
-            sync_active = selected & ~deviated
+            # synchronous: waits for everyone whose upload can still land
+            # (stragglers included; crashed clients never arrive)
+            sync_active = uplinked & ~deviated
             g_new = agg.fedavg_aggregate(
                 g_flat, agg_rows, weights, sync_active, impl=fed.agg_impl,
                 comms=comms, cohort=cohort,
             )
-            round_time = jnp.max(jnp.where(selected, lat, 0.0))
+            round_time = jnp.max(jnp.where(uplinked, lat, 0.0))
         elif fed.aggregation == "async":
             g_new, pending = self._buffered_async(
                 g_flat, deltas, weights, contributing, lat, pending,
@@ -1055,12 +1164,13 @@ class CohortEngine:
                 f"{fed.num_clients}: the whole fleet fits on device — use "
                 f"the resident engine (FedARServer does this automatically)"
             )
-        if fed.aggregation in ("async", "async_seq"):
+        if fed.aggregation == "async_seq":
             raise ValueError(
-                f"aggregation={fed.aggregation!r} carries a per-client "
-                f"delta buffer across rounds, which a resampled cohort "
-                f"cannot: the buffered update would belong to a client no "
-                f"longer on device; use fedar/fedavg with cohort_size"
+                "aggregation='async_seq' folds every client's full local "
+                "model sequentially per round (O(N) and no per-client "
+                "buffer to persist), which a resampled cohort cannot "
+                "replay; use aggregation='async' — its pending-delta "
+                "buffer lives in the client store and follows the cohort"
             )
         if fed.select_frac is not None:
             raise ValueError(
@@ -1096,10 +1206,15 @@ class CohortEngine:
         self.dim = self.engine.dim
         self.mesh = self.engine.mesh
         self.compression = self.engine.compression
+        self.faults = self.engine.faults
         self.store = ClientStore(
             fed,
             self.engine.defense.history_dim(self.dim),
             residual_dim=self.engine.compression.residual_dim(self.dim),
+            # store-resident async: the (N, D) pending-delta buffer lives
+            # in the host table and follows the cohort on/off device, so
+            # an in-flight update survives its client leaving the device
+            pending_dim=self.dim if fed.aggregation == "async" else 0,
         )
         self.poison_mask = self.store.poison_mask
         self.params = flatten(self.template)
@@ -1142,6 +1257,17 @@ class CohortEngine:
             compress_residual=jnp.asarray(rows["residual"]),
             round_idx=jnp.asarray(r, jnp.int32),
         )
+        if self.store.pending_dim:
+            # the cohort's in-flight async slots ride along; issue/arrival
+            # tags are absolute rounds, so an update whose client sat out a
+            # few rounds delivers (staleness-discounted) when it rejoins
+            state = state._replace(
+                pending_delta=jnp.asarray(rows["pending_delta"]),
+                pending_weight=jnp.asarray(rows["pending_weight"]),
+                pending_issued=jnp.asarray(rows["pending_issued"]),
+                pending_arrival=jnp.asarray(rows["pending_arrival"]),
+                pending_valid=jnp.asarray(rows["pending_valid"]),
+            )
         return state, data, idx, valid, elig
 
     def run_round(self, fleet, *, eval_set=None):
@@ -1164,6 +1290,13 @@ class CohortEngine:
             battery=np.asarray(state2.resources.battery),
             history=np.asarray(state2.fg_history),
             residual=np.asarray(state2.compress_residual),
+            pending=None if not self.store.pending_dim else dict(
+                pending_delta=np.asarray(state2.pending_delta),
+                pending_weight=np.asarray(state2.pending_weight),
+                pending_issued=np.asarray(state2.pending_issued),
+                pending_arrival=np.asarray(state2.pending_arrival),
+                pending_valid=np.asarray(state2.pending_valid),
+            ),
         )
         self.store.finish_round(idx, valid, elig)
         return idx, valid, out

@@ -1,0 +1,181 @@
+"""Fault-injection subsystem (selected via ``FedConfig.faults``).
+
+FedAR's premise is that FL clients misbehave — they "infuse incorrect
+models or repeatedly give slow responses" — and the resource-constrained
+IoT surveys (arXiv:2002.10610, arXiv:2308.13157) rank crashes, corrupted
+payloads, battery death and flapping connectivity as the dominant failure
+modes for robot fleets.  This registry mirrors ``core/defense.py`` /
+``core/compress.py``: a named schedule owns a deterministic per-round
+fault draw the engine consumes inside the jitted scan body:
+
+  ``crash``   -- a selected client dies mid-round: its uplink is lost
+                 (exact-zero aggregation weight), but the battery it burned
+                 and the trust penalty for the missed deadline still land.
+  ``corrupt`` -- a fixed subset of clients (``fault_corrupt_frac``) emits
+                 NaN/Inf/garbage rows after local SGD, before decode —
+                 what the engine's non-finite quarantine must absorb.
+  ``battery`` -- periodic battery-death windows: the client reads as dead
+                 to CheckResource for ``fault_battery_rounds`` out of every
+                 ``4 * fault_battery_rounds`` rounds.
+  ``flaky``   -- flapping connectivity: ``fault_flap_rounds`` offline out
+                 of every ``fault_flap_period`` rounds, per-client phase.
+  ``chaos``   -- all of the above at once (the soak-test schedule).
+
+Determinism across shardings: per-round coin flips key on ``(seed, round,
+canonical client id)`` — ONE batched coin table drawn from the round key
+domain-separated by ``FAULT_KEY_FOLD``, gathered by canonical id — and
+the static traits (who CAN corrupt, whose battery dies, flap phases) are
+host-precomputed from ``SeedSequence([seed, domain])`` in canonical
+client order.  A 1-device run and an 8-shard run therefore
+inject bit-identical faults, and ``faults="none"`` never draws a key at
+all (bit-identical to the fault-free engine).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FedConfig
+
+__all__ = ["FaultDraw", "FaultSchedule", "NoFaults", "SeededFaults",
+           "make_faults", "FAULT_KEY_FOLD"]
+
+# domain separator folded into the round key before the per-client fault
+# coins — keeps the fault stream independent of selection/latency/compression
+# draws (core/engine.py folds 0xC0DEC for the stochastic codes)
+FAULT_KEY_FOLD = 0xFA017
+
+# values corrupt clients write over their delta rows, cycled per client:
+# the quarantine must catch non-finite AND huge-but-finite garbage
+_FILL_VALUES = (np.nan, np.inf, -np.inf, 1e32)
+
+
+class FaultDraw(NamedTuple):
+    """One round's fault realization over ``client_ids`` (all same-length
+    boolean/float vectors; replicated when ids are the full canonical
+    ``arange(N)``, shard-local when sliced)."""
+
+    crash: jnp.ndarray  # (N,) bool: dies mid-round if selected
+    corrupt: jnp.ndarray  # (N,) bool: uplink rows replaced with garbage
+    fill: jnp.ndarray  # (N,) f32: the garbage value a corruptor writes
+    unavailable: jnp.ndarray  # (N,) bool: offline this round (CheckResource)
+
+
+class FaultSchedule:
+    """Interface the engine consumes; ``active=False`` means the engine
+    skips the draw entirely (the fault-free bit-identical path)."""
+
+    name = "none"
+    active = False
+
+    def draw(self, key, client_ids, round_idx) -> FaultDraw:
+        raise NotImplementedError
+
+
+class NoFaults(FaultSchedule):
+    """No injection; the engine never calls ``draw``."""
+
+
+class SeededFaults(FaultSchedule):
+    """Deterministic seeded schedule; which fault kinds fire is the only
+    difference between the named schedules."""
+
+    active = True
+
+    def __init__(self, fed: FedConfig, *, crash: bool, corrupt: bool,
+                 battery: bool, flaky: bool):
+        n = self.num_clients = fed.num_clients
+        self.name = fed.faults
+        self.crash_rate = float(fed.fault_crash_rate) if crash else 0.0
+        self.corrupt_rate = float(fed.fault_corrupt_rate) if corrupt else 0.0
+        self.flap_period = max(1, int(fed.fault_flap_period))
+        self.flap_rounds = int(fed.fault_flap_rounds)
+        self.batt_rounds = max(1, int(fed.fault_battery_rounds))
+
+        def pick(frac: float, domain: int) -> np.ndarray:
+            """Exact-count trait mask in canonical client order."""
+            rng = np.random.default_rng(
+                np.random.SeedSequence([fed.seed, FAULT_KEY_FOLD, domain]))
+            mask = np.zeros(n, bool)
+            k = max(1, int(round(frac * n)))
+            mask[rng.permutation(n)[:k]] = True
+            return mask
+
+        rng = np.random.default_rng(
+            np.random.SeedSequence([fed.seed, FAULT_KEY_FOLD, 0]))
+        self.corrupt_clients = (pick(fed.fault_corrupt_frac, 1)
+                                if corrupt else np.zeros(n, bool))
+        fill = np.asarray(_FILL_VALUES, np.float32)[np.arange(n)
+                                                    % len(_FILL_VALUES)]
+        self._fill = jnp.asarray(np.where(self.corrupt_clients, fill, 0.0),
+                                 jnp.float32)
+        self._corrupt_trait = jnp.asarray(self.corrupt_clients)
+
+        self.flap_clients = (pick(fed.fault_flap_frac, 2)
+                             if flaky else np.zeros(n, bool))
+        self._flap_trait = jnp.asarray(self.flap_clients)
+        self._flap_phase = jnp.asarray(
+            rng.integers(0, self.flap_period, n), jnp.int32)
+
+        self.battery_clients = (pick(fed.fault_battery_frac, 3)
+                                if battery else np.zeros(n, bool))
+        self._batt_trait = jnp.asarray(self.battery_clients)
+        self._batt_phase = jnp.asarray(
+            rng.integers(0, 4 * self.batt_rounds, n), jnp.int32)
+
+    def draw(self, key, client_ids, round_idx) -> FaultDraw:
+        """Jit-traceable fault realization for one round.  ``client_ids``
+        are CANONICAL ids, so the coins are identical across shardings; the
+        trait tables index on the same ids.  The whole fleet's coin table
+        is ONE batched draw from the domain-separated round key, gathered
+        by canonical id — any slice of ``client_ids`` reads the same coins
+        the full draw assigns those clients (one threefry call, not N
+        per-client fold-ins — the draw must stay cheap enough for the perf
+        gate's 10% fault-overhead bound)."""
+        table = jax.random.uniform(
+            jax.random.fold_in(key, FAULT_KEY_FOLD), (self.num_clients, 2))
+        u = table[client_ids]
+        crash = u[:, 0] < self.crash_rate
+        corrupt = self._corrupt_trait[client_ids] & (
+            u[:, 1] < self.corrupt_rate)
+        r = jnp.asarray(round_idx, jnp.int32)
+        flapping = self._flap_trait[client_ids] & (
+            jnp.remainder(r + self._flap_phase[client_ids],
+                          self.flap_period) < self.flap_rounds)
+        battery_dead = self._batt_trait[client_ids] & (
+            jnp.remainder(r + self._batt_phase[client_ids],
+                          4 * self.batt_rounds) < self.batt_rounds)
+        return FaultDraw(
+            crash=crash,
+            corrupt=corrupt,
+            fill=self._fill[client_ids],
+            unavailable=flapping | battery_dead,
+        )
+
+
+_KINDS = {
+    # name -> (crash, corrupt, battery, flaky)
+    "crash": (True, False, False, False),
+    "corrupt": (False, True, False, False),
+    "battery": (False, False, True, False),
+    "flaky": (False, False, False, True),
+    "chaos": (True, True, True, True),
+}
+
+
+def make_faults(fed: FedConfig) -> FaultSchedule:
+    """Build the schedule ``FedConfig.faults`` names."""
+    if fed.faults == "none":
+        return NoFaults()
+    try:
+        crash, corrupt, battery, flaky = _KINDS[fed.faults]
+    except KeyError:
+        raise ValueError(
+            f"unknown FedConfig.faults={fed.faults!r} "
+            f"(known: {sorted(_KINDS) + ['none']})"
+        ) from None
+    return SeededFaults(fed, crash=crash, corrupt=corrupt,
+                        battery=battery, flaky=flaky)

@@ -90,11 +90,16 @@ def make_fleet(
 
 
 def check_resource(res: ResourceState, req: TaskRequirement) -> jnp.ndarray:
-    """Algorithm 1 CheckResource: RA list as a boolean mask over clients."""
+    """Algorithm 1 CheckResource: RA list as a boolean mask over clients.
+
+    An exactly-dead client (battery == 0) is always rejected, even under a
+    degenerate ``req.battery == 0`` — a drained robot cannot train, and the
+    fault injector models offline windows by zeroing effective battery."""
     return (
         (res.memory >= req.memory)
         & (res.bandwidth >= req.bandwidth)
         & (res.battery >= req.battery)
+        & (res.battery > 0.0)
     )
 
 

@@ -106,6 +106,9 @@ def sample_cohort(
         (np.asarray(res.memory) >= req.memory)
         & (np.asarray(res.bandwidth) >= req.bandwidth)
         & (np.asarray(res.battery) >= req.battery)
+        # exactly-dead clients never pass CheckResource (mirrors
+        # resources.check_resource under a degenerate req.battery == 0)
+        & (np.asarray(res.battery) > 0.0)
         & (trust_score >= fed.min_trust)
     )
     pool_size = min(n, max(cohort_size, int(n * fed.client_fraction)))

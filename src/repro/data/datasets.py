@@ -29,7 +29,7 @@ true n_u for aggregation weighting).  ``robot_drift`` additionally carries a
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Optional
 
 import numpy as np
@@ -70,6 +70,24 @@ def inert_clients(count: int, samples: int, dim: int, *, windows: int = 0,
     if windows:
         out["round_mask"] = np.zeros((windows, count, samples), bool)
     return out
+
+
+def corrupt_clients(ds: "FederatedDataset", which, fill) -> "FederatedDataset":
+    """Copy of ``ds`` where the clients in the ``which`` mask carry
+    garbage sample features (``fill`` — NaN, +-Inf, or a huge finite
+    value).  Local SGD over such a shard produces a garbage delta through
+    the REAL training path — this is the test-harness mirror of the
+    engine-side corrupt-uplink fault, used to exercise the non-finite
+    quarantine boundary (``tests/test_faults.py``)."""
+    which = np.asarray(which, bool)
+    if which.shape != (ds.num_clients,):
+        raise ValueError(
+            f"corrupt_clients: mask shape {which.shape} vs fleet "
+            f"({ds.num_clients},)"
+        )
+    x = np.array(ds.x)
+    x[which] = np.float32(fill)
+    return replace(ds, x=x)
 
 
 @dataclass

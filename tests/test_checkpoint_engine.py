@@ -129,7 +129,8 @@ def _cohort_resume_roundtrip(tmp_path, **fed_kw):
     ):
         np.testing.assert_array_equal(xi, yi)
         np.testing.assert_array_equal(xv, yv)
-    return ref
+    # ``srv`` stopped at the checkpoint, so its store IS the saved table
+    return ref, srv
 
 
 def test_cohort_store_resume_matches_uninterrupted(tmp_path):
@@ -146,13 +147,50 @@ def test_cohort_store_resume_with_compression_is_bit_exact(tmp_path):
     round-trips: a qsgd-4 run resumed mid-stream is BIT-exact against the
     uninterrupted run (the stochastic codes are keyed on (seed, round,
     client), so the resumed tail replays identical quantizations)."""
-    ref = _cohort_resume_roundtrip(
+    ref, _ = _cohort_resume_roundtrip(
         tmp_path, compress="qsgd", compress_bits=4
     )
     # the residual column genuinely carries state (quantization error != 0)
     store = ref.engine.store
     assert store.residual_dim == ref.engine.dim
     assert np.abs(store.residual).sum() > 0
+
+
+def test_cohort_async_store_resume_is_bit_exact(tmp_path):
+    """The store-resident async buffer is part of the ``save_store`` table:
+    a buffered-async cohort run interrupted mid-stream — with a NON-empty
+    in-flight delta table at checkpoint time (the sub-latency timeout lags
+    every upload) — resumes bit-exact against the uninterrupted run."""
+    ref, at_ckpt = _cohort_resume_roundtrip(
+        tmp_path, aggregation="async", timeout=1e-3
+    )
+    store = at_ckpt.engine.store
+    assert store.pending_dim == ref.engine.dim
+    live = store.pending_valid
+    assert live.any()  # the resume genuinely replayed in-flight deltas
+    assert np.abs(store.pending_delta[live]).sum() > 0
+
+
+def test_restore_rejects_missing_leaf_and_column(tmp_path):
+    """A checkpoint written by a template without a leaf the restorer
+    expects (e.g. a store saved before the async pending columns existed)
+    fails loudly, not silently-zeroed — at both the ckpt layer and the
+    store's ``load_state_dict``."""
+    from repro.core.client_store import ClientStore
+
+    path = str(tmp_path / "old.ckpt")
+    ckpt.save(path, {"a": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="no record"):
+        ckpt.restore(path, {"a": np.zeros(3, np.float32),
+                            "b": np.zeros(2, np.float32)})
+
+    fed = fleet_fed(16, cohort_size=4, local_epochs=1,
+                    defense="foolsgold_sketch", defense_sketch_dim=32)
+    store = ClientStore(fed, history_dim=2)
+    old = store.state_dict()
+    old.pop("pending_delta")
+    with pytest.raises(ValueError, match="missing column"):
+        store.load_state_dict(old)
 
 
 def test_resident_compressed_resume_matches_uninterrupted(tmp_path):

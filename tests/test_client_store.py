@@ -104,6 +104,38 @@ def test_store_finish_round_interest_and_trickle():
     assert int(store.round_idx) == 1
 
 
+def test_store_finish_round_all_ineligible():
+    """An all-ineligible round (dead/banned fleet): no interest credit
+    lands anywhere, everyone trickle-charges, the round counter advances
+    and nothing is stamped as selected."""
+    fed = _cohort_fed(16, 4)
+    store = ClientStore(fed, history_dim=0)
+    s0 = store.score.copy()
+    b0 = store.battery.copy()
+    store.finish_round(np.zeros(4, np.int64), np.zeros(4, bool),
+                       np.zeros(16, bool))
+    np.testing.assert_array_equal(store.score, s0)
+    np.testing.assert_allclose(
+        store.battery, np.minimum(b0 + 0.005, 1.0), atol=1e-7
+    )
+    assert (store.last_selected == -1).all()
+    assert int(store.round_idx) == 1
+
+
+def test_store_finish_round_all_dummy_cohort_keeps_interest():
+    """A fully-underfilled cohort with eligible clients (can happen when
+    eligibility changed between sampling and settlement): every eligible
+    client earns C_Interested — nobody was actually in the cohort."""
+    fed = _cohort_fed(16, 4)
+    store = ClientStore(fed, history_dim=0)
+    eligible = np.zeros(16, bool)
+    eligible[[2, 7]] = True
+    store.finish_round(np.array([2, 7, 0, 0]), np.zeros(4, bool), eligible)
+    np.testing.assert_allclose(store.score[[2, 7]], 50.0 + fed.c_interested)
+    np.testing.assert_allclose(store.score[[0, 1, 3]], 50.0)
+    assert (store.last_selected == -1).all()
+
+
 def test_store_blocks_are_zero_copy_shards():
     store = ClientStore(_cohort_fed(32, 8), history_dim=2, num_shards=4)
     blk = store.block(1)
@@ -201,7 +233,7 @@ def test_cohort_engine_validates_config():
     with pytest.raises(ValueError, match="resident"):
         CohortEngine(model, _cohort_fed(16, 16), REQ)
     with pytest.raises(ValueError, match="buffer"):
-        CohortEngine(model, _cohort_fed(32, 8, aggregation="async"), REQ)
+        CohortEngine(model, _cohort_fed(32, 8, aggregation="async_seq"), REQ)
     with pytest.raises(ValueError, match="select_frac"):
         CohortEngine(model, _cohort_fed(32, 8, select_frac=0.5), REQ)
     with pytest.raises(ValueError, match="cohort-"):
@@ -242,6 +274,65 @@ def test_cohort_matches_resident_when_k_equals_n():
     for x, y in zip(ha["trust"], hb["trust"]):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     for x, y in zip(ha["selected"], hb["selected"]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cohort_all_dummy_round_is_inert():
+    """A round where nobody in the fleet is eligible must not crash, must
+    leave the global model bitwise untouched, and must keep the host
+    bookkeeping consistent (round advances, scores frozen)."""
+    n, k = 32, 8
+    eng = CohortEngine(small_model(16), _cohort_fed(n, k), REQ)
+    fleet = VirtualFleet(n, samples_per_client=40, seed=0)
+    eng.store.battery[:] = 0.0  # dead fleet -> sample_cohort underfills to 0
+    p0 = np.asarray(eng.params).copy()
+    s0 = eng.store.score.copy()
+    idx, valid, out = eng.run_round(fleet)
+    assert not valid.any()
+    np.testing.assert_array_equal(np.asarray(eng.params), p0)
+    np.testing.assert_array_equal(eng.store.score, s0)
+    assert int(eng.store.round_idx) == 1
+    assert (eng.store.last_selected == -1).all()
+
+
+# ------------------------------------------------- store-resident async
+def test_cohort_async_pending_lives_in_the_store():
+    """aggregation='async' in cohort mode: the in-flight delta buffer is a
+    store column that follows clients on and off the device.  A
+    sub-latency timeout forces every upload to lag >= 1 round, so slots
+    must be in flight in the host table between rounds."""
+    n, k = 48, 8
+    eng = CohortEngine(
+        small_model(16), _cohort_fed(n, k, aggregation="async",
+                                     timeout=1e-3), REQ)
+    assert eng.store.pending_dim == eng.dim
+    fleet = VirtualFleet(n, samples_per_client=40, seed=0)
+    eng.run(fleet, rounds=3)
+    live = eng.store.pending_valid
+    assert live.any()
+    assert np.abs(eng.store.pending_delta[live]).sum() > 0
+    # issue/arrival tags are absolute rounds; a lagged upload arrives later
+    assert (eng.store.pending_arrival[live]
+            > eng.store.pending_issued[live]).all()
+    assert np.isfinite(np.asarray(eng.params)).all()
+
+
+def test_cohort_async_k_geq_n_reduces_to_resident():
+    """cohort_size >= N with aggregation='async' strips to the resident
+    buffered-async engine bit-identically (the former ValueError is gone)."""
+    n, rounds = 24, 3
+    fleet = VirtualFleet(n, samples_per_client=40, seed=0)
+    ref = FedARServer(
+        small_model(16), _cohort_fed(n, None, aggregation="async"), REQ)
+    ha = ref.run(ref.engine.prepare_data(fleet.materialize()), rounds)
+    srv = FedARServer(
+        small_model(16), _cohort_fed(n, n, aggregation="async"), REQ)
+    hb = srv.run(fleet, rounds)
+    assert not srv.cohort_mode and "cohort" not in hb
+    np.testing.assert_array_equal(
+        np.asarray(ref.state.params), np.asarray(srv.state.params)
+    )
+    for x, y in zip(ha["trust"], hb["trust"]):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

@@ -106,6 +106,28 @@ def test_missing_axis_reported_not_failed():
     assert missing == ["sharded_rounds_per_sec_by_devices/1/128"]
 
 
+def test_faults_win_condition_bounds_overhead():
+    """The fault axis: chaos must keep >= (1 - 10% - timer slack) of the
+    same-run fault-free throughput; the bound is intra-run so no machine
+    calibration applies."""
+    from benchmarks.perf_gate import faults_win_condition
+
+    fresh = {"faults_rounds_per_sec": {"128": {
+        "none": {"rounds_per_sec": 100.0},
+        "chaos": {"rounds_per_sec": 90.0},
+    }}}
+    violations, checked = faults_win_condition(fresh)
+    assert checked == 1 and not violations
+    fresh["faults_rounds_per_sec"]["128"]["chaos"]["rounds_per_sec"] = 80.0
+    violations, _ = faults_win_condition(fresh)
+    assert violations and violations[0][1] == "chaos"
+    # no fault-free ceiling -> nothing to check, never a false alarm
+    violations, checked = faults_win_condition(
+        {"faults_rounds_per_sec": {"128": {"chaos": 50.0}}}
+    )
+    assert checked == 0 and not violations
+
+
 def test_legacy_float_leaves_are_readable():
     axes = dict(iter_axes(BASE))
     assert axes["scenario_rounds_per_sec/128/iid"] == 80.0
